@@ -1,0 +1,31 @@
+"""Paper Figs. 4/5: GA-NFD population-size study on ResNet-50."""
+from __future__ import annotations
+
+import numpy as np
+
+import repro.core as c
+
+from .common import emit
+
+POPS = (5, 25, 50, 150)
+
+
+def run(budget_s: float = 25.0, seeds=(0, 1)):
+    prob = c.get_problem("RN50-W1A2")
+    hp = c.hyperparams("RN50-W1A2")
+    header = ["population", "bram_best", "bram_mean", "t_converge_mean_s"]
+    rows = []
+    for pop in POPS:
+        costs, times = [], []
+        for seed in seeds:
+            hp2 = dict(hp)
+            hp2["n_pop"] = pop
+            r = c.pack(prob, "ga-nfd", seed=seed, max_seconds=budget_s, **hp2)
+            costs.append(r.cost)
+            times.append(r.time_to_within(0.01))
+        rows.append(
+            [pop, int(min(costs)), float(np.mean(costs)),
+             round(float(np.mean(times)), 2)]
+        )
+    emit("fig45_population_size", header, rows)
+    return rows

@@ -1,0 +1,37 @@
+"""Deliverable (g): per-(arch x shape x mesh) roofline table from the
+compiled dry-run artifacts (experiments/dryrun/*.json)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import emit
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def run():
+    header = [
+        "arch", "shape", "pods", "compute_s", "memory_s", "collective_s",
+        "dominant", "useful_flops_ratio", "hbm_args_gb_per_dev",
+    ]
+    rows = []
+    if not DRYRUN.exists():
+        print("roofline: run `python -m repro.launch.dryrun --all` first")
+        return rows
+    for f in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok":
+            rows.append([r.get("arch"), r.get("shape"),
+                         2 if r.get("multi_pod") else 1, "FAIL", "", "", "", "", ""])
+            continue
+        t = r["roofline"]
+        rows.append([
+            r["arch"], r["shape"], 2 if r["multi_pod"] else 1,
+            f"{t['compute_s']:.3e}", f"{t['memory_s']:.3e}",
+            f"{t['collective_s']:.3e}", t["dominant"],
+            round(r.get("useful_flops_ratio", 0.0), 3),
+            round(r["memory"]["argument_bytes"] / 2**30, 3),
+        ])
+    emit("roofline_table", header, rows)
+    return rows

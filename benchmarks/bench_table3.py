@@ -1,0 +1,49 @@
+"""Paper Table 3: GA/SA x {buffer-swap, NFD} — BRAM cost + convergence time.
+
+Reports, per accelerator and algorithm: best BRAM count over seeds, mean
+time-to-within-1%-of-best (the paper's convergence metric), and the paper's
+published (time, BRAM) for reference.  Wall-clock ratios (NFD vs swap) are
+the claim under reproduction: >100x speedups on deep ResNets.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import repro.core as c
+
+from .common import BUDGETS, SEEDS, emit
+
+ALGOS = ("ga-s", "sa-s", "ga-nfd", "sa-nfd")
+
+
+def run(accelerators=None, budgets=None, seeds=SEEDS):
+    accelerators = accelerators or list(c.ACCELERATORS)
+    budgets = budgets or BUDGETS
+    header = [
+        "accelerator", "algorithm", "bram_best", "bram_mean",
+        "t_converge_mean_s", "paper_bram", "paper_t_s", "baseline_bram",
+    ]
+    rows = []
+    paper_cols = {"ga-s": (0, 2), "sa-s": (1, 3), "ga-nfd": (4, 6), "sa-nfd": (5, 7)}
+    for name in accelerators:
+        prob = c.get_problem(name)
+        hp = c.hyperparams(name)
+        base = prob.baseline_cost()
+        t3 = c.PAPER_TABLE3.get(name)
+        for algo in ALGOS:
+            costs, times = [], []
+            for seed in seeds:
+                r = c.pack(prob, algo, seed=seed, max_seconds=budgets[name], **hp)
+                r.solution.validate()
+                costs.append(r.cost)
+                times.append(r.time_to_within(0.01))
+            pt, pb = ("", "")
+            if t3:
+                ti, bi = paper_cols[algo]
+                pt, pb = t3[ti], t3[bi]
+            rows.append(
+                [name, algo, int(min(costs)), float(np.mean(costs)),
+                 round(float(np.mean(times)), 2), pb, pt, base]
+            )
+    emit("table3_algorithm_comparison", header, rows)
+    return rows

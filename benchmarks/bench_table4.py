@@ -1,0 +1,41 @@
+"""Paper Table 4: mapping-efficiency increase under GA-NFD (inter & intra)."""
+from __future__ import annotations
+
+import repro.core as c
+
+from .common import BUDGETS, emit
+
+
+def run(accelerators=None, budgets=None, seed=0):
+    accelerators = accelerators or list(c.ACCELERATORS)
+    budgets = budgets or BUDGETS
+    header = [
+        "accelerator", "mode", "bram", "efficiency_pct", "delta_bram_x",
+        "paper_bram", "paper_eff_pct", "lower_bound",
+    ]
+    rows = []
+    for name in accelerators:
+        prob = c.get_problem(name)
+        hp = c.hyperparams(name)
+        base_cost = prob.baseline_cost()
+        base_eff = prob.total_bits / (base_cost * prob.bram.capacity_bits)
+        p4 = c.PAPER_TABLE4[name]
+        rows.append(
+            [name, "baseline", base_cost, round(base_eff * 100, 1), 1.0,
+             p4[0], p4[1], prob.lower_bound()]
+        )
+        for mode, intra, pb, pe in (
+            ("intra", True, p4[2], p4[3]),
+            ("inter", False, p4[4], p4[5]),
+        ):
+            r = c.pack(
+                prob, "ga-nfd", seed=seed, max_seconds=budgets[name],
+                intra_layer=intra, **hp,
+            )
+            r.solution.validate(intra_layer=intra)
+            rows.append(
+                [name, mode, r.cost, round(r.efficiency * 100, 1),
+                 round(base_cost / r.cost, 2), pb, pe, prob.lower_bound()]
+            )
+    emit("table4_efficiency_increase", header, rows)
+    return rows

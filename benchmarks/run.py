@@ -1,0 +1,52 @@
+"""Benchmark harness — one function per paper table/figure + the TPU
+adaptation and roofline tables.  Prints name,value CSVs (see each module).
+
+  python -m benchmarks.run                # everything (tens of minutes)
+  python -m benchmarks.run --only table4  # one table
+  python -m benchmarks.run --quick        # reduced budgets (CI-scale)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="table3|table4|fig45|tpu|seqpack|kernels|roofline")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+
+    from . import (
+        bench_fig45,
+        bench_kernels,
+        bench_roofline,
+        bench_seqpack,
+        bench_table3,
+        bench_table4,
+        bench_tpu_packing,
+    )
+    from .common import BUDGETS
+
+    budgets = {k: max(3, v // 4) for k, v in BUDGETS.items()} if args.quick else None
+    small = ["CNV-W1A1", "CNV-W2A2", "Tincy-YOLO", "RN50-W1A2"] if args.quick else None
+
+    jobs = {
+        "table3": lambda: bench_table3.run(accelerators=small, budgets=budgets),
+        "table4": lambda: bench_table4.run(accelerators=small, budgets=budgets),
+        "fig45": lambda: bench_fig45.run(budget_s=8 if args.quick else 25),
+        "tpu": lambda: bench_tpu_packing.run(budget_s=2 if args.quick else 5),
+        "seqpack": lambda: bench_seqpack.run(n_docs=500 if args.quick else 2000),
+        "kernels": bench_kernels.run,
+        "roofline": bench_roofline.run,
+    }
+    selected = [args.only] if args.only else list(jobs)
+    for name in selected:
+        t0 = time.perf_counter()
+        jobs[name]()
+        print(f"[bench {name} done in {time.perf_counter() - t0:.1f}s]\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Batched serving with the paper's memory packing as a first-class feature.
+
+Plans GA-NFD banks over the (per-layer) weight tensors, materializes the
+PackedParameterStore, and serves from the packed views — outputs are
+bit-identical to the unpacked model; the store reports the tile-padding
+bytes recovered.
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or [
+        "--arch", "granite-moe-1b-a400m", "--batch", "2",
+        "--prompt-len", "16", "--gen-len", "8", "--packed",
+    ]
+    main(argv)

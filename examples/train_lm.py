@@ -1,0 +1,20 @@
+"""End-to-end training driver example: a small qwen3-family LM with the
+full production stack — NFD-packed data pipeline, AdamW, checkpointing,
+NaN rollback, resume.
+
+Defaults are CPU-feasible (~1-2 min). For the ~100M-parameter run used on
+real hardware:
+    python examples/train_lm.py --d-model 768 --layers 12 --steps 300 \
+        --batch 8 --seq 1024
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or [
+        "--arch", "qwen3-0.6b", "--d-model", "128", "--layers", "4",
+        "--vocab", "2048", "--steps", "30", "--batch", "4", "--seq", "256",
+        "--ckpt-dir", "/tmp/repro_train_example",
+    ]
+    main(argv)

@@ -1,0 +1,7 @@
+"""repro: evolutionary bin packing for memory-efficient dataflow inference.
+
+Layers: `repro.core` (the paper), `repro.memory` (TPU adaptation),
+`repro.models`/`repro.sharding`/`repro.runtime` (the multi-pod framework),
+`repro.launch` (mesh / dryrun / train / serve entry points).
+"""
+__version__ = "1.0.0"

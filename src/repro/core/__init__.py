@@ -1,0 +1,31 @@
+"""Evolutionary bin packing for memory-efficient dataflow inference (core).
+
+The paper's primary contribution: cardinality-constrained, variable-bin-size
+bin packing of parameter memories onto physical RAM grids, solved with the
+Next-Fit Dynamic heuristic hybridized into genetic algorithms and simulated
+annealing.  `repro.memory` adapts the same machinery to TPU tile grids.
+"""
+from .accelerators import (  # noqa: F401
+    ACCELERATORS,
+    PAPER_TABLE2,
+    PAPER_TABLE3,
+    PAPER_TABLE4,
+    TABLE1_ROWS,
+    get_buffers,
+    get_problem,
+    hyperparams,
+)
+from .api import ALGORITHMS, pack  # noqa: F401
+from .ga import GeneticPacker, buffer_swap  # noqa: F401
+from .nfd import nfd_from_scratch, nfd_pack_order, nfd_repack  # noqa: F401
+from .problem import (  # noqa: F401
+    BRAM18_CAPACITY_BITS,
+    BRAM18_MODES,
+    BRAMSpec,
+    Buffer,
+    PackingProblem,
+    PackingResult,
+    Solution,
+    buffers_from_shape_rows,
+)
+from .sa import SimulatedAnnealingPacker  # noqa: F401

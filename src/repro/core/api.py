@@ -1,0 +1,96 @@
+"""Single entry point for all memory packers."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from . import baselines
+from .ga import GeneticPacker
+from .problem import PackingProblem, PackingResult, Solution
+from .sa import SimulatedAnnealingPacker
+
+ALGORITHMS = ("ga-nfd", "ga-s", "sa-nfd", "sa-s", "nfd", "ffd", "next-fit", "baseline")
+
+
+def pack(
+    prob: PackingProblem,
+    algorithm: str = "ga-nfd",
+    seed: int = 0,
+    max_seconds: float = 30.0,
+    intra_layer: bool = False,
+    **hyper,
+) -> PackingResult:
+    """Pack `prob` with the named algorithm and return a PackingResult.
+
+    Accepts the paper's Table 2 hyperparameter names: n_pop, n_tour, p_mut,
+    p_adm_w, p_adm_h, sa_t0, sa_rc.
+    """
+    algorithm = algorithm.lower()
+    if algorithm in ("ga-nfd", "ga-s"):
+        packer = GeneticPacker(
+            mutation="nfd" if algorithm == "ga-nfd" else "swap",
+            n_pop=hyper.get("n_pop", 50),
+            n_tour=hyper.get("n_tour", 5),
+            p_mut=hyper.get("p_mut", 0.4),
+            p_adm_w=hyper.get("p_adm_w", 0.0),
+            p_adm_h=hyper.get("p_adm_h", 0.1),
+            nfd_threshold=hyper.get("nfd_threshold", 0.95),
+            nfd_extra_frac=hyper.get("nfd_extra_frac", 0.01),
+            nfd_max_bins=hyper.get("nfd_max_bins", 12),
+            layer_weight=hyper.get("layer_weight", 0.01),
+            intra_layer=intra_layer,
+            max_seconds=max_seconds,
+            patience=hyper.get("patience", 200),
+            seed=seed,
+        )
+        return packer.pack(prob)
+    if algorithm in ("sa-nfd", "sa-s"):
+        packer = SimulatedAnnealingPacker(
+            perturbation="nfd" if algorithm == "sa-nfd" else "swap",
+            t0=hyper.get("sa_t0", 30.0),
+            rc=hyper.get("sa_rc", 1.0),
+            p_adm_w=hyper.get("p_adm_w", 0.0),
+            p_adm_h=hyper.get("p_adm_h", 0.1),
+            nfd_threshold=hyper.get("nfd_threshold", 0.95),
+            nfd_extra_frac=hyper.get("nfd_extra_frac", 0.01),
+            nfd_max_bins=hyper.get("nfd_max_bins", 8),
+            intra_layer=intra_layer,
+            max_seconds=max_seconds,
+            patience=hyper.get("patience", 20_000),
+            seed=seed,
+        )
+        return packer.pack(prob)
+
+    # deterministic one-shot heuristics
+    t0 = time.perf_counter()
+    if algorithm == "nfd":
+        from .nfd import nfd_from_scratch
+
+        sol = nfd_from_scratch(
+            prob,
+            np.random.default_rng(seed),
+            p_adm_w=hyper.get("p_adm_w", 0.0),
+            p_adm_h=hyper.get("p_adm_h", 0.1),
+            intra_layer=intra_layer,
+        )
+    elif algorithm == "ffd":
+        sol = baselines.first_fit_decreasing(prob, intra_layer=intra_layer)
+    elif algorithm == "next-fit":
+        sol = baselines.next_fit(prob)
+    elif algorithm == "baseline":
+        sol = baselines.singleton(prob)
+    else:
+        raise ValueError(f"unknown algorithm {algorithm!r}; options: {ALGORITHMS}")
+    wall = time.perf_counter() - t0
+    cost = sol.cost()
+    return PackingResult(
+        solution=sol,
+        cost=cost,
+        efficiency=sol.efficiency(),
+        wall_time_s=wall,
+        algorithm=algorithm + ("-intra" if intra_layer else ""),
+        trace=[(wall, cost)],
+        iterations=1,
+        params=dict(seed=seed, **hyper),
+    )

@@ -1,0 +1,181 @@
+"""Genetic-algorithm memory packer — Algorithm 2 of the paper.
+
+Bin-per-gene chromosome (Falkenauer encoding): an individual IS a packing
+solution; each gene is one bin (a group of buffer indices).  There is no
+crossover — as in the paper, mutation (buffer swap for GA-S, NFD repack for
+GA-NFD) drives exploration, and tournament selection drives exploitation.
+Fitness is the multi-objective weighted sum of BRAM cost and mean distinct
+layers per bin (placement locality).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .nfd import nfd_from_scratch, nfd_repack
+from .problem import PackingProblem, PackingResult, Solution
+
+
+def buffer_swap(
+    sol: Solution, rng: np.random.Generator, n_moves: int = 1, intra_layer: bool = False
+) -> Solution:
+    """MPack-style perturbation: move random buffers between random bins."""
+    out = sol.copy()
+    prob = out.problem
+    for _ in range(n_moves):
+        if len(out.bins) < 2:
+            break
+        src = int(rng.integers(len(out.bins)))
+        dst = int(rng.integers(len(out.bins)))
+        if src == dst or not out.bins[src]:
+            continue
+        item = out.bins[src][int(rng.integers(len(out.bins[src])))]
+        dst_bin = out.bins[dst]
+        if intra_layer and dst_bin and int(prob.layers[dst_bin[0]]) != int(
+            prob.layers[item]
+        ):
+            continue
+        if len(dst_bin) >= prob.max_items:
+            # swap instead of move to preserve cardinality feasibility
+            j = int(rng.integers(len(dst_bin)))
+            other = dst_bin[j]
+            if intra_layer and int(prob.layers[other]) != int(
+                prob.layers[out.bins[src][0]] if out.bins[src] else prob.layers[item]
+            ):
+                continue
+            dst_bin[j] = item
+            out.bins[src][out.bins[src].index(item)] = other
+        else:
+            out.bins[src].remove(item)
+            dst_bin.append(item)
+    out.bins = [b for b in out.bins if b]
+    return out
+
+
+def fitness(sol: Solution, layer_weight: float) -> float:
+    f = float(sol.cost())
+    if layer_weight > 0.0:
+        f += layer_weight * sol.distinct_layers_per_bin()
+    return f
+
+
+class GeneticPacker:
+    def __init__(
+        self,
+        mutation: str = "nfd",  # "nfd" (GA-NFD) or "swap" (GA-S)
+        n_pop: int = 50,
+        n_tour: int = 5,
+        p_mut: float = 0.4,
+        p_adm_w: float = 0.0,
+        p_adm_h: float = 0.1,
+        nfd_threshold: float = 0.95,
+        nfd_extra_frac: float = 0.01,
+        nfd_max_bins: int = 12,
+        swap_moves: int = 4,
+        layer_weight: float = 0.01,
+        intra_layer: bool = False,
+        max_seconds: float = 60.0,
+        max_generations: int = 100_000,
+        patience: int = 200,
+        seed: int = 0,
+    ):
+        if mutation not in ("nfd", "swap"):
+            raise ValueError(f"unknown mutation {mutation!r}")
+        self.__dict__.update(locals())
+        del self.__dict__["self"]
+
+    @property
+    def name(self) -> str:
+        return "GA-NFD" if self.mutation == "nfd" else "GA-S"
+
+    def _mutate(self, sol: Solution, rng: np.random.Generator) -> Solution:
+        if self.mutation == "nfd":
+            return nfd_repack(
+                sol,
+                rng,
+                threshold=self.nfd_threshold,
+                p_adm_w=self.p_adm_w,
+                p_adm_h=self.p_adm_h,
+                intra_layer=self.intra_layer,
+                extra_frac=self.nfd_extra_frac,
+                max_bins=self.nfd_max_bins,
+            )
+        return buffer_swap(
+            sol, rng, n_moves=self.swap_moves, intra_layer=self.intra_layer
+        )
+
+    def pack(self, prob: PackingProblem) -> PackingResult:
+        rng = np.random.default_rng(self.seed)
+        t0 = time.perf_counter()
+        pop = [
+            nfd_from_scratch(
+                prob,
+                rng,
+                p_adm_w=self.p_adm_w,
+                p_adm_h=self.p_adm_h,
+                intra_layer=self.intra_layer,
+                sort_by_width=(k % 2 == 0),  # seed half the population width-aware
+            )
+            for k in range(self.n_pop)
+        ]
+        costs = np.asarray([s.cost() for s in pop], dtype=np.float64)
+        fits = np.asarray([fitness(s, self.layer_weight) for s in pop])
+        best_i = int(np.argmin(costs))
+        best = pop[best_i].copy()
+        best_cost = int(costs[best_i])
+        trace = [(time.perf_counter() - t0, best_cost)]
+        stale = 0
+        gen = 0
+        while gen < self.max_generations:
+            gen += 1
+            now = time.perf_counter() - t0
+            if now > self.max_seconds or stale >= self.patience:
+                break
+            # --- mutation (mutated individuals are fresh objects; unmutated
+            # ones may be shared references from selection, never mutated
+            # in place)
+            for i in range(self.n_pop):
+                if rng.random() < self.p_mut:
+                    pop[i] = self._mutate(pop[i], rng)
+                    costs[i] = pop[i].cost()
+                    fits[i] = costs[i] + (
+                        self.layer_weight * pop[i].distinct_layers_per_bin()
+                        if self.layer_weight > 0
+                        else 0.0
+                    )
+            # --- track best
+            gi = int(np.argmin(costs))
+            if int(costs[gi]) < best_cost:
+                best_cost = int(costs[gi])
+                best = pop[gi].copy()
+                trace.append((time.perf_counter() - t0, best_cost))
+                stale = 0
+            else:
+                stale += 1
+            # --- tournament selection (with replacement) + elitism
+            idx = rng.integers(self.n_pop, size=(self.n_pop, self.n_tour))
+            winners = idx[np.arange(self.n_pop), np.argmin(fits[idx], axis=1)]
+            winners[0] = int(np.argmin(fits))  # elitism: best survives
+            pop = [pop[int(w)] for w in winners]
+            costs = costs[winners]
+            fits = fits[winners]
+        wall = time.perf_counter() - t0
+        trace.append((wall, best_cost))
+        return PackingResult(
+            solution=best,
+            cost=best_cost,
+            efficiency=best.efficiency(),
+            wall_time_s=wall,
+            algorithm=self.name + ("-intra" if self.intra_layer else ""),
+            trace=trace,
+            iterations=gen,
+            params=dict(
+                n_pop=self.n_pop,
+                n_tour=self.n_tour,
+                p_mut=self.p_mut,
+                p_adm_w=self.p_adm_w,
+                p_adm_h=self.p_adm_h,
+                seed=self.seed,
+            ),
+        )

@@ -1,0 +1,317 @@
+"""Core data model for the CNN-parameter-memory -> FPGA-OCM bin packing problem.
+
+Faithful to Kroes et al., "Evolutionary Bin Packing for Memory-Efficient
+Dataflow Inference Acceleration on FPGA" (2020):
+
+* A *buffer* is one CNN parameter memory with a fixed word width (bits) and
+  depth (words).  In FINN-style accelerators a layer with parallelism
+  ``N_PE x (N_SIMD, D, W)`` contributes ``N_PE`` buffers of width
+  ``N_SIMD * W`` bits and depth ``D``.
+* A *bin* is a group of buffers co-located in one composed block-RAM
+  structure.  Buffers in a bin are stacked in depth; the bin's width is the
+  maximum buffer width and its height the sum of buffer depths.  A bin may
+  hold at most ``max_items`` buffers (the paper's cardinality constraint,
+  derived from the 2 physical BRAM ports; the paper evaluates with 4).
+* A Xilinx BRAM18 stores 18 Kib and supports aspect-ratio modes
+  ``1x16K, 2x8K, 4x4K, 9x2K, 18x1K, 36x512``.  A (width x height) bin is
+  implemented by tiling BRAMs in one mode; the implementation cost is
+
+      cost(w, h) = min_m ceil(w / w_m) * ceil(h / d_m)
+
+  and the paper's Eq. 1 mapping efficiency generalizes to
+
+      E = stored_bits / (cost * CAPACITY_BITS).
+
+The model is bit-exact reproducible in software; `tests/test_core_problem.py`
+pins it against every published baseline efficiency in the paper's Table 4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+# Xilinx BRAM18: 16K data bits + 2K parity bits.  Parity bits are usable as
+# data only for aspect widths >= 9, hence the capacity difference per mode.
+BRAM18_MODES: tuple[tuple[int, int], ...] = (
+    (1, 16384),
+    (2, 8192),
+    (4, 4096),
+    (9, 2048),
+    (18, 1024),
+    (36, 512),
+)
+BRAM18_CAPACITY_BITS = 18 * 1024  # Eq. 1 denominator (18432), as in the paper
+
+
+@dataclasses.dataclass(frozen=True)
+class BRAMSpec:
+    """A physical RAM primitive with configurable aspect-ratio modes."""
+
+    modes: tuple[tuple[int, int], ...] = BRAM18_MODES
+    capacity_bits: int = BRAM18_CAPACITY_BITS
+
+    @property
+    def mode_widths(self) -> np.ndarray:
+        return np.asarray([m[0] for m in self.modes], dtype=np.int64)
+
+    @property
+    def mode_depths(self) -> np.ndarray:
+        return np.asarray([m[1] for m in self.modes], dtype=np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class Buffer:
+    """One logical parameter memory."""
+
+    width: int  # bits per word (= N_SIMD * W for FINN layers)
+    depth: int  # words
+    layer: int  # originating NN layer id (for intra-layer packing)
+    name: str = ""
+
+    @property
+    def bits(self) -> int:
+        return self.width * self.depth
+
+
+class PackingProblem:
+    """Immutable problem instance: a set of buffers + hardware constraints."""
+
+    def __init__(
+        self,
+        buffers: Sequence[Buffer],
+        bram: BRAMSpec | None = None,
+        max_items: int = 4,
+        name: str = "",
+    ):
+        if not buffers:
+            raise ValueError("PackingProblem needs at least one buffer")
+        if max_items < 1:
+            raise ValueError("max_items must be >= 1")
+        self.buffers = tuple(buffers)
+        self.bram = bram or BRAMSpec()
+        self.max_items = int(max_items)
+        self.name = name
+        self.widths = np.asarray([b.width for b in buffers], dtype=np.int64)
+        self.depths = np.asarray([b.depth for b in buffers], dtype=np.int64)
+        self.layers = np.asarray([b.layer for b in buffers], dtype=np.int64)
+        self.total_bits = int(np.sum(self.widths * self.depths))
+        self._mode_w = self.bram.mode_widths  # (M,)
+        self._mode_d = self.bram.mode_depths  # (M,)
+        self._modes_py = tuple(self.bram.modes)  # fast scalar path
+        self._cost_cache: dict[tuple[int, int], tuple[int, int, int]] = {}
+        # python-int copies for the scalar hot path (numpy scalars are slow)
+        self.widths_py = tuple(int(w) for w in self.widths)
+        self.depths_py = tuple(int(d) for d in self.depths)
+        self.layers_py = tuple(int(l) for l in self.layers)
+        self.bits_py = tuple(w * d for w, d in zip(self.widths_py, self.depths_py))
+
+    @property
+    def n(self) -> int:
+        return len(self.buffers)
+
+    # ------------------------------------------------------------------ cost
+    def bin_cost_many(self, widths: np.ndarray, heights: np.ndarray) -> np.ndarray:
+        """Vectorized BRAM count for bins of given (width, height), best mode."""
+        w = np.asarray(widths, dtype=np.int64)[..., None]
+        h = np.asarray(heights, dtype=np.int64)[..., None]
+        per_mode = -(-w // self._mode_w) * -(-h // self._mode_d)  # ceil div
+        return np.min(per_mode, axis=-1)
+
+    def _cost_mode_gap(self, width: int, height: int) -> tuple[int, int, int]:
+        """(cost, best_mode_index, grid_gap) for a (width, height) bin.
+
+        Pure-python scalar hot path with memoization — called millions of
+        times inside NFD/GA/SA inner loops.
+        """
+        key = (width, height)
+        hit = self._cost_cache.get(key)
+        if hit is not None:
+            return hit
+        best_cost = 1 << 62
+        best_m = 0
+        for m, (mw, md) in enumerate(self._modes_py):
+            c = -(-width // mw) * -(-height // md)
+            if c < best_cost:
+                best_cost = c
+                best_m = m
+        md = self._modes_py[best_m][1]
+        gap = -(-height // md) * md - height
+        out = (best_cost, best_m, gap)
+        self._cost_cache[key] = out
+        return out
+
+    def bin_cost(self, width: int, height: int) -> int:
+        return self._cost_mode_gap(width, height)[0]
+
+    def bin_mode(self, width: int, height: int) -> tuple[int, int]:
+        """The (mode_width, mode_depth) minimizing BRAM count for this bin."""
+        m = self._cost_mode_gap(width, height)[1]
+        return self._modes_py[m]
+
+    def grid_gap(self, width: int, height: int) -> int:
+        """Unused depth rows on the BRAM grid under the best mode (NFD's gap)."""
+        return self._cost_mode_gap(width, height)[2]
+
+    def bin_stats(self, items: Sequence[int]) -> tuple[int, int, int]:
+        """(width, height, cost) of a bin holding the given buffer indices."""
+        w = 0
+        h = 0
+        for i in items:
+            wi = self.widths_py[i]
+            if wi > w:
+                w = wi
+            h += self.depths_py[i]
+        return w, h, self._cost_mode_gap(w, h)[0]
+
+    # -------------------------------------------------------------- baseline
+    def singleton_solution(self) -> "Solution":
+        """The FINN-style unpacked baseline: one buffer per bin."""
+        return Solution(self, [[i] for i in range(self.n)])
+
+    def baseline_cost(self) -> int:
+        return int(np.sum(self.bin_cost_many(self.widths, self.depths)))
+
+    def lower_bound(self) -> int:
+        """Information-theoretic minimum BRAM count (capacity bound)."""
+        return -(-self.total_bits // self.bram.capacity_bits)
+
+
+class Solution:
+    """A packing: partition of buffer indices into bins.
+
+    The representation is a list of bins, each a list of buffer indices.
+    Aggregate statistics are computed with numpy for speed; GA/SA call
+    ``cost()`` in their inner loop.
+    """
+
+    __slots__ = ("problem", "bins")
+
+    def __init__(self, problem: PackingProblem, bins: Iterable[Iterable[int]]):
+        self.problem = problem
+        self.bins = [list(b) for b in bins if len(list(b)) > 0]
+
+    def copy(self) -> "Solution":
+        return Solution(self.problem, [list(b) for b in self.bins])
+
+    # ------------------------------------------------------------ aggregates
+    def cost(self) -> int:
+        """Total BRAM count (the paper's primary objective)."""
+        stats = self.problem.bin_stats
+        return sum(stats(b)[2] for b in self.bins)
+
+    def bin_costs(self) -> np.ndarray:
+        stats = self.problem.bin_stats
+        return np.asarray([stats(b)[2] for b in self.bins], dtype=np.int64)
+
+    def bin_efficiencies(self) -> np.ndarray:
+        p = self.problem
+        bits_py = p.bits_py
+        cap = p.bram.capacity_bits
+        out = np.empty(len(self.bins), dtype=np.float64)
+        for bi, b in enumerate(self.bins):
+            bits = sum(bits_py[i] for i in b)
+            out[bi] = bits / (p.bin_stats(b)[2] * cap)
+        return out
+
+    def efficiency(self) -> float:
+        """Paper Eq. 1 generalized: stored bits / allocated BRAM capacity."""
+        return self.problem.total_bits / (self.cost() * self.problem.bram.capacity_bits)
+
+    def distinct_layers_per_bin(self) -> float:
+        layers = self.problem.layers_py
+        total = sum(len({layers[i] for i in b}) for b in self.bins)
+        return total / len(self.bins)
+
+    def max_items_per_bin(self) -> int:
+        return max(len(b) for b in self.bins)
+
+    # ------------------------------------------------------------ validation
+    def validate(self, intra_layer: bool = False) -> None:
+        """Raises if the packing is not implementable under the constraints."""
+        p = self.problem
+        seen: list[int] = sorted(i for b in self.bins for i in b)
+        if seen != list(range(p.n)):
+            raise ValueError("solution does not place every buffer exactly once")
+        for b in self.bins:
+            if len(b) > p.max_items:
+                raise ValueError(
+                    f"bin of size {len(b)} exceeds cardinality {p.max_items}"
+                )
+            if intra_layer and len({int(p.layers[i]) for i in b}) > 1:
+                raise ValueError("intra-layer constraint violated")
+
+    def is_valid(self, intra_layer: bool = False) -> bool:
+        try:
+            self.validate(intra_layer=intra_layer)
+            return True
+        except ValueError:
+            return False
+
+
+@dataclasses.dataclass
+class PackingResult:
+    """Outcome of one packer run (algorithm-agnostic)."""
+
+    solution: Solution
+    cost: int
+    efficiency: float
+    wall_time_s: float
+    algorithm: str
+    trace: list[tuple[float, int]]  # (seconds since start, best cost so far)
+    iterations: int
+    params: dict
+
+    @property
+    def baseline_cost(self) -> int:
+        return self.solution.problem.baseline_cost()
+
+    @property
+    def baseline_efficiency(self) -> float:
+        p = self.solution.problem
+        return p.total_bits / (p.baseline_cost() * p.bram.capacity_bits)
+
+    @property
+    def delta_bram(self) -> float:
+        """Paper Table 4's memory-footprint reduction factor."""
+        return self.baseline_cost / max(self.cost, 1)
+
+    def time_to_within(self, frac: float = 0.01) -> float:
+        """Paper's convergence metric: time to reach within `frac` of best."""
+        target = self.cost * (1.0 + frac)
+        for t, c in self.trace:
+            if c <= target:
+                return t
+        return self.wall_time_s
+
+    def summary(self) -> str:
+        return (
+            f"{self.algorithm}: cost={self.cost} BRAM "
+            f"(baseline {self.baseline_cost}, x{self.delta_bram:.2f} smaller), "
+            f"eff={self.efficiency * 100:.1f}% "
+            f"(baseline {self.baseline_efficiency * 100:.1f}%), "
+            f"t={self.wall_time_s:.2f}s"
+        )
+
+
+def buffers_from_shape_rows(
+    rows: Sequence[tuple[int, tuple[int, int, int]]]
+) -> list[Buffer]:
+    """Expand Table-1-style rows ``(N_PE, (N_SIMD, D, W))`` into buffers.
+
+    Each row describes one layer; the row's ``N_PE`` parameter memories all
+    belong to that layer (relevant for intra-layer packing).
+    """
+    out: list[Buffer] = []
+    for layer, (n_pe, (n_simd, depth, wbits)) in enumerate(rows):
+        for pe in range(n_pe):
+            out.append(
+                Buffer(
+                    width=n_simd * wbits,
+                    depth=depth,
+                    layer=layer,
+                    name=f"L{layer}PE{pe}",
+                )
+            )
+    return out

@@ -1,0 +1,112 @@
+"""Simulated-annealing memory packer — Algorithm 3 of the paper.
+
+SA-S reproduces Vasiljevic & Chow's MPack approach (buffer-swap
+perturbation); SA-NFD replaces the perturbation with the paper's Next-Fit
+Dynamic repack.  Temperature follows a Lundy-Mees schedule
+``T = T0 / (1 + Rc * iter)`` parameterized by the paper's Table 2 (T0, Rc);
+acceptance of uphill moves is Metropolis: ``P_A = exp(-dE / T)``.
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import numpy as np
+
+from .ga import buffer_swap
+from .nfd import nfd_from_scratch, nfd_repack
+from .problem import PackingProblem, PackingResult, Solution
+
+
+class SimulatedAnnealingPacker:
+    def __init__(
+        self,
+        perturbation: str = "nfd",  # "nfd" (SA-NFD) or "swap" (SA-S)
+        t0: float = 30.0,
+        rc: float = 1.0,
+        p_adm_w: float = 0.0,
+        p_adm_h: float = 0.1,
+        nfd_threshold: float = 0.95,
+        nfd_extra_frac: float = 0.01,
+        nfd_max_bins: int = 8,
+        swap_moves: int = 2,
+        intra_layer: bool = False,
+        max_seconds: float = 60.0,
+        max_iterations: int = 2_000_000,
+        patience: int = 20_000,
+        seed: int = 0,
+    ):
+        if perturbation not in ("nfd", "swap"):
+            raise ValueError(f"unknown perturbation {perturbation!r}")
+        self.__dict__.update(locals())
+        del self.__dict__["self"]
+
+    @property
+    def name(self) -> str:
+        return "SA-NFD" if self.perturbation == "nfd" else "SA-S"
+
+    def _perturb(self, sol: Solution, rng: np.random.Generator) -> Solution:
+        if self.perturbation == "nfd":
+            return nfd_repack(
+                sol,
+                rng,
+                threshold=self.nfd_threshold,
+                p_adm_w=self.p_adm_w,
+                p_adm_h=self.p_adm_h,
+                intra_layer=self.intra_layer,
+                extra_frac=self.nfd_extra_frac,
+                max_bins=self.nfd_max_bins,
+            )
+        return buffer_swap(
+            sol, rng, n_moves=self.swap_moves, intra_layer=self.intra_layer
+        )
+
+    def pack(self, prob: PackingProblem) -> PackingResult:
+        rng = np.random.default_rng(self.seed)
+        t_start = time.perf_counter()
+        sol = nfd_from_scratch(
+            prob,
+            rng,
+            p_adm_w=self.p_adm_w,
+            p_adm_h=self.p_adm_h,
+            intra_layer=self.intra_layer,
+        )
+        cost = sol.cost()
+        best, best_cost = sol.copy(), cost
+        trace = [(time.perf_counter() - t_start, best_cost)]
+        it = 0
+        stale = 0
+        while it < self.max_iterations and stale < self.patience:
+            if (it & 0xFF) == 0 and time.perf_counter() - t_start > self.max_seconds:
+                break
+            temp = self.t0 / (1.0 + self.rc * it)
+            cand = self._perturb(sol, rng)
+            cand_cost = cand.cost()
+            d_e = cand_cost - cost
+            if d_e < 0 or (temp > 0 and rng.random() < math.exp(-d_e / temp)):
+                sol, cost = cand, cand_cost
+            if cost < best_cost:
+                best, best_cost = sol.copy(), cost
+                trace.append((time.perf_counter() - t_start, best_cost))
+                stale = 0
+            else:
+                stale += 1
+            it += 1
+        wall = time.perf_counter() - t_start
+        trace.append((wall, best_cost))
+        return PackingResult(
+            solution=best,
+            cost=int(best_cost),
+            efficiency=best.efficiency(),
+            wall_time_s=wall,
+            algorithm=self.name + ("-intra" if self.intra_layer else ""),
+            trace=trace,
+            iterations=it,
+            params=dict(
+                t0=self.t0,
+                rc=self.rc,
+                p_adm_w=self.p_adm_w,
+                p_adm_h=self.p_adm_h,
+                seed=self.seed,
+            ),
+        )

@@ -1,0 +1,20 @@
+"""Jit'd wrapper: per-individual total BRAM cost for a padded population."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.problem import BRAM18_MODES
+
+from .kernel import binpack_fitness_pallas
+from .ref import binpack_fitness_ref
+
+
+def population_costs(
+    widths, heights, modes=BRAM18_MODES, backend: str = "pallas", interpret=True
+):
+    """(P, NB) geometry -> (P,) total cost per individual."""
+    if backend == "pallas":
+        per_bin = binpack_fitness_pallas(widths, heights, tuple(modes), interpret)
+    else:
+        per_bin = binpack_fitness_ref(widths, heights, tuple(modes))
+    return jnp.sum(per_bin, axis=1, dtype=jnp.int64)

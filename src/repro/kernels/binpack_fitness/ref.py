@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the binpack fitness kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def binpack_fitness_ref(
+    widths: jax.Array, heights: jax.Array, modes: tuple[tuple[int, int], ...]
+) -> jax.Array:
+    w = widths.astype(jnp.int32)
+    h = heights.astype(jnp.int32)
+    costs = [
+        -(-w // mw) * -(-h // md) for mw, md in modes
+    ]
+    best = jnp.min(jnp.stack(costs), axis=0).astype(jnp.int32)
+    return jnp.where(widths > 0, best, 0)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the packed-bank segment matvec."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def packed_gather_ref(bank: jax.Array, x: jax.Array, seg: jax.Array) -> jax.Array:
+    gathered = x[seg]  # (R, C)
+    return jnp.sum(bank * gathered, axis=1)

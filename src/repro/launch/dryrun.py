@@ -1,0 +1,279 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+# ruff: noqa: E402  (the XLA flag MUST precede any jax-importing module)
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves (a) the sharding config is coherent on the
+production mesh (compile succeeds, no sharding mismatch / unsupported
+collective), (b) it fits (memory_analysis), and records (c) the roofline
+terms (cost_analysis FLOPs/bytes + collective bytes parsed from the
+optimized HLO).  Results are cached as JSON under experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod|--single-pod] [--force]
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCHS, get_config, shape_cells
+from repro.launch.hlo_analysis import analyze_hlo, roofline_terms
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (
+    cache_specs,
+    input_specs,
+    opt_specs,
+    param_specs,
+)
+from repro.models.config import SHAPES
+from repro.optim import AdamWConfig
+from repro.runtime import TrainState, make_decode_step, make_prefill_step, make_train_step
+from repro.sharding import (
+    batch_partition_specs,
+    cache_partition_specs,
+    opt_partition_specs,
+    param_partition_specs,
+    to_named,
+)
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _attach(shardings, structs):
+    """Rebuild ShapeDtypeStructs with NamedShardings attached."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        structs,
+        shardings,
+    )
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    """Returns (lowered, compiled, meta) for one cell."""
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind != "train":
+        # serving profile: bf16 weights (production practice; halves the
+        # weight-read term that dominates decode)
+        cfg = _dc.replace(cfg, param_dtype="bfloat16")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+
+    p_struct = param_specs(cfg)
+    p_shard = to_named(mesh, param_partition_specs(cfg, mesh, p_struct))
+    specs = input_specs(cfg, shape_name)
+
+    with mesh:
+        if shape.kind == "train":
+            o_struct = opt_specs(p_struct)
+            o_shard = to_named(mesh, opt_partition_specs(cfg, mesh, o_struct))
+            b_shard = to_named(mesh, batch_partition_specs(cfg, mesh, specs["batch"]))
+            state = TrainState(_attach(p_shard, p_struct), _attach(o_shard, o_struct))
+            batch = _attach(b_shard, specs["batch"])
+            step = make_train_step(cfg, AdamWConfig())
+            jitted = jax.jit(
+                step,
+                out_shardings=(TrainState(p_shard, o_shard), None),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state, batch)
+        elif shape.kind == "prefill":
+            b_shard = to_named(mesh, batch_partition_specs(cfg, mesh, specs["batch"]))
+            batch = _attach(b_shard, specs["batch"])
+            c_struct = cache_specs(cfg, shape)
+            c_shard = to_named(mesh, cache_partition_specs(cfg, mesh, c_struct))
+            step = make_prefill_step(cfg, shape.seq_len)
+            jitted = jax.jit(step, out_shardings=(c_shard, None))
+            lowered = jitted.lower(_attach(p_shard, p_struct), batch)
+        else:  # decode
+            c_struct = specs["cache"]
+            c_shard = to_named(mesh, cache_partition_specs(cfg, mesh, c_struct))
+            cache = _attach(c_shard, c_struct)
+            step = make_decode_step(cfg)
+            jitted = jax.jit(
+                step, out_shardings=(c_shard, None), donate_argnums=(1,)
+            )
+            lowered = jitted.lower(
+                _attach(p_shard, p_struct), cache, specs["token"], specs["pos"]
+            )
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    compile_s = time.perf_counter() - t0
+    return lowered, compiled, dict(
+        arch=arch, shape=shape_name, multi_pod=multi_pod, n_devices=n_dev,
+        kind=shape.kind, compile_s=compile_s,
+    )
+
+
+def _model_flops(cfg, shape, n_params_total: int, n_params_active: int) -> float:
+    """Analytic useful-FLOPs (the 6ND / 2ND accounting), global."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.encoder_decoder:
+        # encoder runs B*S tokens, decoder B*T tokens; halve params per stack
+        n_half = n_params_active / 2
+        t = min(448, cfg.max_target_len)
+        fwd = 2 * n_half * b * s + 2 * n_half * b * t
+        return 3 * fwd if shape.kind == "train" else (
+            fwd if shape.kind == "prefill" else 2 * n_half * b
+        )
+    tokens = b * s
+    if shape.kind == "train":
+        return 6 * n_params_active * tokens
+    if shape.kind == "prefill":
+        return 2 * n_params_active * tokens
+    return 2 * n_params_active * b  # decode: one token per sequence
+
+
+def analyze(lowered, compiled, meta: dict, cfg=None, shape=None, p_struct=None) -> dict:
+    xla_cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    cost = analyze_hlo(hlo)  # trip-count aware
+    # memory-term estimate: weights/args read once + each materialized tensor
+    # written once and read once (perfect-fusion); cost.bytes is the
+    # zero-fusion upper bound. Real TPU traffic lies between; we report both.
+    arg_bytes = int(getattr(mem, "argument_size_in_bytes", 0))
+    bytes_est = arg_bytes + 2.0 * cost.wbytes
+    terms = roofline_terms(cost.flops, bytes_est, cost.coll_bytes)
+    out = dict(meta)
+    out.update(
+        flops_per_device=cost.flops,
+        bytes_per_device=bytes_est,
+        bytes_upper_bound=cost.bytes,
+        bytes_write_once=cost.wbytes,
+        collective_operand_bytes=int(cost.coll_bytes),
+        collectives_by_op={k: list(v) for k, v in cost.coll_by_op.items()},
+        unknown_trip_loops=cost.unknown_trip,
+        xla_cost_analysis=dict(
+            flops=float(xla_cost.get("flops", 0.0)),
+            bytes_accessed=float(xla_cost.get("bytes accessed", 0.0)),
+        ),
+        roofline=terms,
+        memory=dict(
+            argument_bytes=int(getattr(mem, "argument_size_in_bytes", 0)),
+            output_bytes=int(getattr(mem, "output_size_in_bytes", 0)),
+            temp_bytes=int(getattr(mem, "temp_size_in_bytes", 0)),
+            generated_code_bytes=int(getattr(mem, "generated_code_size_in_bytes", 0)),
+            alias_bytes=int(getattr(mem, "alias_size_in_bytes", 0)),
+        ),
+        hlo_lines=hlo.count("\n"),
+    )
+    if cfg is not None and p_struct is not None:
+        import numpy as _np
+
+        n_total = int(
+            sum(_np.prod(x.shape) for x in jax.tree.leaves(p_struct))
+        )
+        expert = (
+            cfg.n_layers * cfg.n_experts * (3 if cfg.mlp_gated else 2)
+            * cfg.d_model * cfg.d_ff
+            if cfg.n_experts
+            else 0
+        )
+        active_expert = (
+            cfg.n_layers * cfg.top_k * (3 if cfg.mlp_gated else 2)
+            * cfg.d_model * cfg.d_ff * cfg.capacity_factor
+            if cfg.n_experts
+            else 0
+        )
+        n_active = n_total - expert + active_expert
+        mf = _model_flops(cfg, shape, n_total, n_active)
+        hlo_flops_global = cost.flops * meta["n_devices"]
+        out.update(
+            n_params=n_total,
+            n_params_active=int(n_active),
+            model_flops_global=mf,
+            useful_flops_ratio=(mf / hlo_flops_global) if hlo_flops_global else 0.0,
+        )
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, force: bool = False) -> dict:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}"
+    path = OUT_DIR / f"{tag}.json"
+    if path.exists() and not force:
+        return json.loads(path.read_text())
+    try:
+        lowered, compiled, meta = lower_cell(arch, shape_name, multi_pod)
+        cfg = get_config(arch)
+        result = analyze(
+            lowered, compiled, meta,
+            cfg=cfg, shape=SHAPES[shape_name], p_struct=param_specs(cfg),
+        )
+        result["status"] = "ok"
+    except Exception as e:  # record failures: they are bugs to fix
+        result = dict(
+            arch=arch, shape=shape_name, multi_pod=multi_pod,
+            status="error", error=f"{type(e).__name__}: {e}",
+            traceback=traceback.format_exc()[-4000:],
+        )
+    path.write_text(json.dumps(result, indent=2))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    pods = []
+    if args.multi_pod or not args.single_pod:
+        pods.append(True)
+    if args.single_pod or not args.multi_pod:
+        pods.insert(0, False)
+
+    cells: list[tuple[str, str, bool]] = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in shape_cells(arch):
+                for mp in pods:
+                    cells.append((arch, shape, mp))
+    else:
+        archs = [args.arch] if args.arch else list(ARCHS)
+        for arch in archs:
+            shapes = [args.shape] if args.shape else shape_cells(arch)
+            for shape in shapes:
+                for mp in pods:
+                    cells.append((arch, shape, mp))
+
+    n_ok = 0
+    for arch, shape, mp in cells:
+        t0 = time.perf_counter()
+        r = run_cell(arch, shape, mp, force=args.force)
+        dt = time.perf_counter() - t0
+        status = r.get("status")
+        if status == "ok":
+            n_ok += 1
+            terms = r["roofline"]
+            print(
+                f"[OK ] {arch:22s} {shape:12s} pods={2 if mp else 1} "
+                f"compile={r['compile_s']:.0f}s "
+                f"compute={terms['compute_s']:.3e}s mem={terms['memory_s']:.3e}s "
+                f"coll={terms['collective_s']:.3e}s dom={terms['dominant']} ({dt:.0f}s)",
+                flush=True,
+            )
+        else:
+            print(f"[FAIL] {arch:22s} {shape:12s} pods={2 if mp else 1}: {r.get('error','?')[:160]}", flush=True)
+    print(f"{n_ok}/{len(cells)} cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,467 @@
+"""Trip-count-aware cost model over compiled HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop *body once* — for
+scan-over-layers models that undercounts FLOPs, bytes, and collective
+traffic by the layer count.  This module parses the optimized HLO text into
+computations and walks the call graph from ENTRY:
+
+  * while ops multiply body+condition cost by ``known_trip_count`` (emitted
+    by XLA in backend_config for counted loops; fallback 1 with a flag);
+  * fusion/call/conditional recurse into callees for FLOPs;
+  * dot FLOPs = 2 * |result| * |contracted dims| (from operand shapes);
+  * bytes accessed are accounted at the *caller* level (operands + result of
+    each top-level instruction — fusion-internal traffic is free, matching
+    HloCostAnalysis semantics);
+  * collective bytes = operand bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute / ragged-all-to-all.
+
+Also derives the three roofline terms against TPU v5e constants.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "ragged-all-to-all",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_ATTR_RE = re.compile(r"(?:calls|to_apply|body|condition)=%([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shapes_in(text: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(text: str) -> int:
+    total = 0
+    for dt, dims in _shapes_in(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    op: str
+    result_bytes: int
+    result_elems: int
+    lhs_dims: list[int]
+    contracting: list[int]
+    operand_names: list[str]
+    operand_bytes: int
+    calls: list[str]
+    branches: list[str]
+    trip: int
+    raw: str
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0  # zero-fusion upper bound (operands + results)
+    wbytes: float = 0.0  # write-once lower bound (results of real ops only)
+    coll_bytes: float = 0.0
+    coll_by_op: dict = field(default_factory=dict)
+    unknown_trip: int = 0
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.wbytes += other.wbytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        for k, (c, b) in other.coll_by_op.items():
+            c0, b0 = self.coll_by_op.get(k, (0, 0))
+            self.coll_by_op[k] = (c0 + c * mult, b0 + b * mult)
+        self.unknown_trip += other.unknown_trip
+
+
+_OPCODE_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+
+# ops that move no real data / pure control
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "bitcast-convert",
+}
+
+
+def _parse_computations(hlo: str):
+    """name -> list[Instr]; also returns entry computation name."""
+    comps: dict[str, list[Instr]] = {}
+    entry = None
+    cur: list[Instr] | None = None
+    cur_shapes: dict[str, int] = {}
+    shapes_global: dict[str, int] = {}
+
+    header_re = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+    for line in hlo.splitlines():
+        sline = line.strip()
+        hm = header_re.match(sline)
+        if hm:
+            name = hm.group(2)
+            comps[name] = []
+            cur = comps[name]
+            cur_shapes = {}
+            if hm.group(1):
+                entry = name
+            # parameters declared in the header don't carry sizes per-name
+            continue
+        if sline == "}" or sline.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OPCODE_RE.match(sline)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # result type: balanced parens for tuples, else up to first space
+        rhs_s = rhs.lstrip()
+        if rhs_s.startswith("("):
+            depth = 0
+            for idx, ch in enumerate(rhs_s):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            head = rhs_s[: idx + 1]
+            rest = rhs_s[idx + 1 :].lstrip()
+        else:
+            sp = rhs_s.find(" ")
+            head = rhs_s[:sp] if sp > 0 else rhs_s
+            rest = rhs_s[sp + 1 :].lstrip() if sp > 0 else ""
+        opm = re.match(r"([a-z][a-z0-9\-]*)\s*\(", rest)
+        op = opm.group(1) if opm else "?"
+        result_bytes = _bytes_of(head)
+        shp = _shapes_in(head)
+        result_elems = 0
+        for _, dims in shp:
+            n = 1
+            for d in dims:
+                n *= d
+            result_elems += n
+        cur_shapes[name] = result_bytes
+        shapes_global[name] = result_bytes
+        if opm:
+            close = rest.find(")", opm.end())
+            args = rest[opm.end() : close] if close > 0 else ""
+        else:
+            args = ""
+        operand_names = _NAME_RE.findall(args)
+        operand_bytes = sum(
+            cur_shapes.get(a, shapes_global.get(a, 0)) for a in operand_names
+        )
+        calls = _CALL_ATTR_RE.findall(rhs)
+        branches = []
+        bm = _BRANCHES_RE.search(rhs)
+        if bm:
+            branches = _NAME_RE.findall(bm.group(1))
+        trip = 1
+        tm = _TRIP_RE.search(rhs)
+        if tm:
+            trip = int(tm.group(1))
+        lhs_dims: list[int] = []
+        contracting: list[int] = []
+        if op == "dot":
+            cm = _CONTRACT_RE.search(rhs)
+            if cm:
+                contracting = [int(x) for x in cm.group(1).split(",") if x]
+            # lhs shape: first shape literal in args, else lookup is lossy —
+            # HLO prints operand types inline in most versions
+            arg_shapes = _shapes_in(args)
+            if arg_shapes:
+                lhs_dims = arg_shapes[0][1]
+        cur.append(
+            Instr(
+                name=name, op=op, result_bytes=result_bytes,
+                result_elems=result_elems, lhs_dims=lhs_dims,
+                contracting=contracting, operand_names=operand_names,
+                operand_bytes=operand_bytes, calls=calls, branches=branches,
+                trip=trip, raw=sline,
+            )
+        )
+    return comps, entry, shapes_global
+
+
+def _dot_flops(inst: Instr, dims_by_name: dict[str, list[int]]) -> float:
+    lhs = inst.lhs_dims
+    if not lhs and inst.operand_names:
+        lhs = dims_by_name.get(inst.operand_names[0], [])
+    k = 1
+    for d in inst.contracting:
+        if d < len(lhs):
+            k *= lhs[d]
+    return 2.0 * inst.result_elems * k
+
+
+class HloCostModel:
+    """Walks the HLO call graph with backend-artifact corrections:
+
+    1. while bodies multiply by known_trip_count;
+    2. fusions rooted in dynamic-update-slice charge the update window, not
+       the full (aliased) result buffer;
+    3. XLA:CPU promotes bf16 dots to f32 via *metadata-less* converts (a TPU
+       backend keeps bf16); metadata-less widening converts are free, and
+       tensors they produce are charged at bf16 width for the memory and
+       collective terms (FLOPs are unaffected).
+    """
+
+    def __init__(self, hlo_text: str):
+        self.comps, self.entry, self.sizes_global = _parse_computations(hlo_text)
+        # dims of every named instruction (for dot lhs lookup fallback)
+        self.dims_by_name: dict[str, list[int]] = {}
+        for instrs in self.comps.values():
+            for i in instrs:
+                m = _shapes_in(i.raw.split("=", 1)[1].split("(", 1)[0])
+                if m:
+                    self.dims_by_name[i.name] = m[0][1]
+        self._memo: dict[str, Cost] = {}
+        self._artifact: set[str] = set()
+        self._mark_artifacts()
+
+    # -------------------------------------------------- dtype artifacts
+    def _mark_artifacts(self):
+        convert_comps = set()
+        for cname, instrs in self.comps.items():
+            real = [i for i in instrs if i.op not in _FREE_OPS]
+            if (
+                len(real) == 1
+                and real[0].op == "convert"
+                and "metadata=" not in real[0].raw
+            ):
+                convert_comps.add(cname)
+        for instrs in self.comps.values():
+            for i in instrs:
+                widening_convert = (
+                    i.op == "convert" and "metadata=" not in i.raw
+                ) or (i.op == "fusion" and any(c in convert_comps for c in i.calls))
+                if widening_convert and i.operand_names:
+                    opb = self.sizes_global.get(i.operand_names[0], 0)
+                    if opb and i.result_bytes > opb:
+                        self._artifact.add(i.name)
+        # dots fed by artifact-widened operands produce artifact-f32 results
+        for instrs in self.comps.values():
+            for i in instrs:
+                if i.op == "dot" and any(a in self._artifact for a in i.operand_names):
+                    self._artifact.add(i.name)
+        # propagate through same-size elementwise chains: when the largest
+        # operand of an elementwise/fusion op is artifact-widened, the result
+        # is too (the whole f32 region exists only because the CPU backend
+        # normalized bf16 away; a TPU backend keeps the chain in bf16).
+        for _ in range(8):  # fixpoint over chains
+            changed = False
+            for instrs in self.comps.values():
+                for i in instrs:
+                    if i.name in self._artifact or i.op in _FREE_OPS:
+                        continue
+                    if i.op in ("dot", "while", "conditional"):
+                        continue
+                    sizes = [
+                        (self.sizes_global.get(a, 0), a) for a in i.operand_names
+                    ]
+                    if not sizes:
+                        continue
+                    big, name = max(sizes)
+                    if (
+                        big > 0
+                        and name in self._artifact
+                        and i.result_bytes >= big // 2
+                    ):
+                        self._artifact.add(i.name)
+                        changed = True
+            if not changed:
+                break
+
+    def _eff(self, name: str) -> int:
+        b = self.sizes_global.get(name, 0)
+        return b // 2 if name in self._artifact else b
+
+    def _eff_result(self, inst: Instr) -> int:
+        return (
+            inst.result_bytes // 2 if inst.name in self._artifact else inst.result_bytes
+        )
+
+    def _eff_operands(self, inst: Instr) -> int:
+        return sum(self._eff(a) for a in inst.operand_names)
+
+    def _fusion_bytes(self, callee: str, inst: Instr) -> tuple[int, int]:
+        """(read_bytes, write_bytes) of one fusion call.
+
+        Parameters consumed through (dynamic-)slice/gather read only the
+        window; a dynamic-update-slice root writes only the update window.
+        Intermediates inside the fusion are free (registers/VMEM).
+        """
+        instrs = self.comps.get(callee, [])
+        param_names: dict[str, int] = {}
+        local_sizes: dict[str, int] = {}
+        for i in instrs:
+            local_sizes[i.name] = i.result_bytes
+            if i.op == "parameter":
+                m = re.search(r"parameter\((\d+)\)", i.raw)
+                if m:
+                    param_names[i.name] = int(m.group(1))
+        read = 0
+        dus_write = 0
+        for i in instrs:
+            if i.op in ("dynamic-slice", "slice", "gather"):
+                if any(a in param_names for a in i.operand_names):
+                    read += i.result_bytes
+                    continue
+            if i.op == "dynamic-update-slice":
+                upd = (
+                    local_sizes.get(i.operand_names[1], 0)
+                    if len(i.operand_names) > 1
+                    else 0
+                )
+                dus_write += upd
+                read += upd  # reads the update operand
+                continue
+            for a in i.operand_names:
+                k = param_names.get(a)
+                if k is not None and k < len(inst.operand_names):
+                    read += self._eff(inst.operand_names[k])
+        write = dus_write if dus_write else self._eff_result(inst)
+        return read, write
+
+    def cost_of(self, comp_name: str) -> Cost:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        self._memo[comp_name] = Cost()  # cycle guard
+        total = Cost()
+        for inst in self.comps.get(comp_name, []):
+            if inst.op in _FREE_OPS:
+                continue
+            if inst.name in self._artifact and inst.op != "dot":
+                continue  # backend-inserted widening convert: free on TPU
+            if inst.op == "while":
+                body_cost = Cost()
+                for c in inst.calls:
+                    body_cost.add(self.cost_of(c))
+                if inst.trip == 1 and "known_trip_count" not in inst.raw:
+                    total.unknown_trip += 1
+                total.add(body_cost, mult=inst.trip)
+                continue  # body instructions account for all traffic
+            if inst.op == "conditional":
+                branch_costs = [self.cost_of(b) for b in inst.branches]
+                if branch_costs:
+                    worst = max(branch_costs, key=lambda c: c.flops + c.bytes)
+                    total.add(worst)
+                total.bytes += self._eff_result(inst)
+                total.wbytes += self._eff_result(inst)
+                continue
+            if inst.op in ("fusion", "call", "custom-call", "async-start"):
+                wrote = 0
+                for c in inst.calls:
+                    sub = self.cost_of(c)
+                    # FLOPs and collectives recurse; bytes via param-read model
+                    total.flops += sub.flops
+                    total.coll_bytes += sub.coll_bytes
+                    for k, v in sub.coll_by_op.items():
+                        c0, b0 = total.coll_by_op.get(k, (0, 0))
+                        total.coll_by_op[k] = (c0 + v[0], b0 + v[1])
+                    r, w = self._fusion_bytes(c, inst)
+                    total.bytes += r + w
+                    wrote += w
+                if not inst.calls:
+                    wrote = self._eff_result(inst)
+                    total.bytes += wrote + self._eff_operands(inst)
+                total.wbytes += wrote
+                continue
+            if inst.op == "dot":
+                total.flops += _dot_flops(inst, self.dims_by_name)
+                total.bytes += self._eff_operands(inst) + self._eff_result(inst)
+                total.wbytes += self._eff_result(inst)
+                continue
+            if any(inst.op.startswith(c) or inst.op == c for c in COLLECTIVE_OPS):
+                opb = self._eff_operands(inst) or self._eff_result(inst)
+                base = next(
+                    c for c in COLLECTIVE_OPS
+                    if inst.op == c or inst.op.startswith(c)
+                )
+                total.coll_bytes += opb
+                c0, b0 = total.coll_by_op.get(base, (0, 0))
+                total.coll_by_op[base] = (c0 + 1, b0 + opb)
+                total.bytes += opb + self._eff_result(inst)
+                total.wbytes += self._eff_result(inst)
+                continue
+            if inst.op.endswith("-done"):
+                continue
+            if inst.op in ("dynamic-slice", "slice", "gather"):
+                total.bytes += 2 * self._eff_result(inst)
+                total.wbytes += self._eff_result(inst)
+                continue
+            if inst.op in ("dynamic-update-slice", "scatter"):
+                # in-place window update: read update, read+write the window
+                upd = (
+                    self._eff(inst.operand_names[1])
+                    if len(inst.operand_names) > 1
+                    else 0
+                )
+                total.bytes += 3 * upd
+                total.wbytes += upd
+                continue
+            # generic elementwise / reduce / copy: 1 flop per output element
+            total.flops += inst.result_elems
+            total.bytes += self._eff_operands(inst) + self._eff_result(inst)
+            total.wbytes += self._eff_result(inst)
+        self._memo[comp_name] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.cost_of(self.entry)
+
+
+def analyze_hlo(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).entry_cost()
+
+
+def roofline_terms(
+    flops_per_device: float,
+    bytes_per_device: float,
+    collective_bytes_per_device: float,
+) -> dict:
+    compute_s = flops_per_device / PEAK_FLOPS
+    memory_s = bytes_per_device / HBM_BW
+    collective_s = collective_bytes_per_device / ICI_BW
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+    }
+    dominant = max(terms, key=terms.get)
+    terms["dominant"] = dominant
+    terms["bound_s"] = terms[dominant]
+    return terms

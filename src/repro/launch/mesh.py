@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  The single-pod mesh is 16x16 = 256 chips
+("data", "model"); the multi-pod mesh adds a leading "pod" axis (2 pods =
+512 chips) which composes with "data" for hierarchical data parallelism —
+gradient all-reduces become (pod-local reduce-scatter, cross-pod all-reduce,
+pod-local all-gather) under XLA's 2-D reduction lowering, the DCN-friendly
+pattern.  A "pipe" axis for pipeline stages can be added here without any
+model-code change (stage = slice of the scanned layer axis); see DESIGN.md
+section 5 for why the deployed configuration uses pod-DP instead.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices but only {len(devices)} present; "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "(dryrun.py sets this automatically)"
+        )
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """1-device mesh for CPU smoke tests and examples."""
+    return jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])

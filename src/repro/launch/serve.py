@@ -1,0 +1,91 @@
+"""Batched serving driver: prefill a batch of prompts, decode N tokens.
+
+``--packed`` routes the weights through the paper's memory packer
+(PackedParameterStore): banks are planned with GA-NFD, materialized, and
+the model consumes ``store.unpack()`` views — demonstrating the packed
+parameter path end-to-end with identical outputs.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.launch.train import scaled_config
+from repro.memory import PackedParameterStore, plan_packing
+from repro.models import model as M
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--scale", choices=["smoke", "full"], default="smoke")
+    ap.add_argument("--d-model", type=int, default=0)
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--vocab", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--packed", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = scaled_config(args)
+    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+
+    if args.packed:
+        plans = plan_packing(params, max_seconds=3.0, split_stacked=True)
+        store = PackedParameterStore(params, plans)
+        for isz, s in store.stats().items():
+            print(
+                f"packed itemsize={isz}: {s['packed_tensors']} tensors in "
+                f"{s['banks']} banks, eff {s['efficiency_before']:.3f} -> "
+                f"{s['efficiency_after']:.3f} (saved {s['saved_bytes']} bytes)"
+            )
+        params = store.unpack()
+
+    b, p_len, g_len = args.batch, args.prompt_len, args.gen_len
+    cache_len = p_len + g_len
+    rng = np.random.default_rng(args.seed)
+    prompts = jnp.asarray(
+        rng.integers(2, cfg.vocab_size, (b, p_len)), jnp.int32
+    )
+    batch = {"tokens": prompts}
+    if cfg.frontend == "vision_stub":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(b, cfg.num_patches, cfg.d_model)) * 0.02, jnp.float32
+        )
+        cache_len += cfg.num_patches
+    if cfg.encoder_decoder:
+        batch = {
+            "frames": jnp.asarray(
+                rng.normal(size=(b, p_len, cfg.d_model)) * 0.02, jnp.float32
+            ),
+            "tokens": prompts[:, :4],
+        }
+
+    prefill = jax.jit(lambda p, bt: M.prefill(cfg, p, bt, cache_len))
+    decode = jax.jit(lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
+
+    t0 = time.perf_counter()
+    cache, logits = prefill(params, batch)
+    tok = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+    out_tokens = [tok]
+    pos0 = batch["tokens"].shape[1] + (cfg.num_patches if "patches" in batch else 0)
+    for i in range(g_len - 1):
+        cache, logits = decode(params, cache, tok, jnp.asarray(pos0 + i, jnp.int32))
+        tok = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+        out_tokens.append(tok)
+    dt = time.perf_counter() - t0
+    gen = np.stack([np.asarray(t) for t in out_tokens], axis=1)
+    print(f"generated {gen.shape} in {dt:.2f}s ({b * g_len / dt:.1f} tok/s)")
+    print("first row:", gen[0][:12], "...")
+    return gen
+
+
+if __name__ == "__main__":
+    main()

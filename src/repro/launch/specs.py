@@ -1,0 +1,87 @@
+"""Abstract input specs (ShapeDtypeStruct) for every (arch x shape) cell.
+
+The same pattern as shannon/kernels: weak-type-correct, shardable stand-ins;
+no device allocation ever happens for the full configs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.optim import adamw_init
+
+Struct = jax.ShapeDtypeStruct
+
+WHISPER_DECODER_TRAIN_LEN = 448  # whisper targets are <=448 tokens
+WHISPER_DECODER_PROMPT = 8  # decoder prompt tokens at prefill
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.encoder_decoder:
+        t = min(WHISPER_DECODER_TRAIN_LEN, cfg.max_target_len)
+        return {
+            "frames": Struct((b, s, cfg.d_model), jnp.float32),
+            "tokens": Struct((b, t), jnp.int32),
+            "targets": Struct((b, t), jnp.int32),
+        }
+    if cfg.frontend == "vision_stub":
+        p = cfg.num_patches
+        return {
+            "patches": Struct((b, p, cfg.d_model), jnp.float32),
+            "tokens": Struct((b, s - p), jnp.int32),
+            "targets": Struct((b, s), jnp.int32),
+        }
+    return {
+        "tokens": Struct((b, s), jnp.int32),
+        "targets": Struct((b, s), jnp.int32),
+    }
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    specs = train_batch_specs(cfg, shape)
+    specs.pop("targets")
+    if cfg.encoder_decoder:
+        specs["tokens"] = Struct((b, WHISPER_DECODER_PROMPT), jnp.int32)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    return jax.eval_shape(functools.partial(M.init_cache, cfg, b, s))
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b = shape.global_batch
+    return {
+        "cache": cache_specs(cfg, shape),
+        "token": Struct((b,), jnp.int32),
+        "pos": Struct((), jnp.int32),
+    }
+
+
+def param_specs(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(M.init_params, cfg), jax.random.PRNGKey(0)
+    )
+
+
+def opt_specs(params_shape):
+    return jax.eval_shape(adamw_init, params_shape)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """All abstract inputs for one cell: the entry point used by dryrun.py."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape)}
+    if shape.kind == "decode":
+        return decode_input_specs(cfg, shape)
+    raise ValueError(shape.kind)

@@ -1,0 +1,3 @@
+from .planner import BankPlan, PlanEntry, plan_packing, tile_efficiency  # noqa: F401
+from .store import PackedParameterStore  # noqa: F401
+from .tiles import TILE_ROWS, padded_bytes, tile_grid_problem  # noqa: F401

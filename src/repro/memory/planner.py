@@ -1,0 +1,171 @@
+"""Bank planner: run the paper's packers over a model's parameter tree.
+
+Only tensors that actually waste tile padding (efficiency below a threshold)
+are candidates; large tile-aligned matmul weights are left in place.  The
+planner returns a BankPlan that the PackedParameterStore materializes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core import pack
+from repro.memory import tiles
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanEntry:
+    path: str
+    row_offset: int
+    rows: int
+    cols: int
+    shape: tuple[int, ...]
+
+
+@dataclasses.dataclass
+class BankPlan:
+    itemsize: int
+    banks: list[list[PlanEntry]]  # one inner list per physical bank
+    unpacked: list[str]  # paths stored as plain arrays
+    padded_bytes_before: int
+    padded_bytes_after: int
+    logical_bytes: int
+    packer_result: object | None = None
+
+    @property
+    def bank_shapes(self) -> list[tuple[int, int]]:
+        out = []
+        sub = tiles.TILE_ROWS.get(self.itemsize, 8)
+        for bank in self.banks:
+            rows = sum(e.rows for e in bank)
+            cols = max(e.cols for e in bank)
+            out.append(
+                (-(-rows // sub) * sub, -(-cols // tiles.LANES) * tiles.LANES)
+            )
+        return out
+
+    @property
+    def saved_bytes(self) -> int:
+        return self.padded_bytes_before - self.padded_bytes_after
+
+    def efficiency_before(self) -> float:
+        return self.logical_bytes / max(1, self.padded_bytes_before)
+
+    def efficiency_after(self) -> float:
+        return self.logical_bytes / max(1, self.padded_bytes_after)
+
+
+def tile_efficiency(shape: tuple[int, ...], itemsize: int) -> float:
+    return tiles.logical_bytes(shape, itemsize) / max(
+        1, tiles.padded_bytes(shape, itemsize)
+    )
+
+
+def _flatten_params(
+    params, split_stacked: bool = False, n_layers: int | None = None
+) -> list[tuple[str, tuple[int, ...], int]]:
+    """(path, shape, itemsize) per logical buffer.
+
+    With ``split_stacked`` every leaf under a stacked-layer collection is
+    split into per-layer slices ``path#k`` — the deployment-artifact view
+    (per-layer weights, as in FINN's per-layer memories and HF checkpoints).
+    """
+    out = []
+
+    def path_str(path):
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(f"layer_{p.idx}")
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        ps = path_str(path)
+        shape = tuple(leaf.shape)
+        stacked = ps.startswith(("layers/", "enc_layers/")) and len(shape) >= 1
+        if split_stacked and stacked and (n_layers is None or shape[0] == n_layers or True):
+            for k in range(shape[0]):
+                out.append((f"{ps}#{k}", shape[1:] or (1,), leaf.dtype.itemsize))
+        else:
+            out.append((ps, shape, leaf.dtype.itemsize))
+    return out
+
+
+def plan_packing(
+    params,
+    algorithm: str = "ga-nfd",
+    max_items: int = 4,
+    eff_threshold: float = 0.9,
+    intra_layer: bool = False,
+    max_seconds: float = 5.0,
+    seed: int = 0,
+    split_stacked: bool = False,
+) -> dict[int, BankPlan]:
+    """Plan packed banks per dtype class. Returns {itemsize: BankPlan}.
+
+    Stacked-layer tensors (leading layer dim) are treated per-slice when the
+    per-layer slice is the wasteful unit — here we keep it simple and treat
+    the folded 2-D view of each leaf as one buffer (the leading layer dim
+    folds into rows, so stacked tensors are already row-contiguous).
+    """
+    entries = _flatten_params(params, split_stacked=split_stacked)
+    plans: dict[int, BankPlan] = {}
+    for itemsize in sorted({e[2] for e in entries}):
+        klass = [e for e in entries if e[2] == itemsize]
+        candidates = [
+            e for e in klass if tile_efficiency(e[1], itemsize) < eff_threshold
+        ]
+        skipped = [e for e in klass if e not in candidates]
+        before = sum(tiles.padded_bytes(e[1], itemsize) for e in klass)
+        logical = sum(tiles.logical_bytes(e[1], itemsize) for e in klass)
+        if len(candidates) < 2:
+            plans[itemsize] = BankPlan(
+                itemsize=itemsize, banks=[], unpacked=[e[0] for e in klass],
+                padded_bytes_before=before, padded_bytes_after=before,
+                logical_bytes=logical,
+            )
+            continue
+        prob, paths = tiles.tile_grid_problem(candidates, max_items=max_items)
+        result = pack(
+            prob, algorithm, seed=seed, max_seconds=max_seconds,
+            intra_layer=intra_layer,
+        )
+        result.solution.validate(intra_layer=intra_layer)
+        shape_by_path = {e[0]: e[1] for e in candidates}
+        banks: list[list[PlanEntry]] = []
+        packed_bytes = 0
+        sub = tiles.TILE_ROWS.get(itemsize, 8)
+        for bin_items in result.solution.bins:
+            bank = []
+            row = 0
+            cols = 0
+            for idx in bin_items:
+                path = paths[idx]
+                r, c = tiles.fold_2d(shape_by_path[path])
+                bank.append(
+                    PlanEntry(
+                        path=path, row_offset=row, rows=r, cols=c,
+                        shape=shape_by_path[path],
+                    )
+                )
+                row += r
+                cols = max(cols, c)
+            banks.append(bank)
+            packed_bytes += (
+                -(-row // sub) * sub * -(-cols // tiles.LANES) * tiles.LANES * itemsize
+            )
+        after = packed_bytes + sum(
+            tiles.padded_bytes(e[1], itemsize) for e in skipped
+        )
+        plans[itemsize] = BankPlan(
+            itemsize=itemsize, banks=banks, unpacked=[e[0] for e in skipped],
+            padded_bytes_before=before, padded_bytes_after=after,
+            logical_bytes=logical, packer_result=result,
+        )
+    return plans

@@ -1,0 +1,122 @@
+"""PackedParameterStore: materialize a BankPlan and serve logical views.
+
+The store holds (a) fused 2-D bank arrays for packed tensors and (b) plain
+arrays for everything else.  ``view(path)`` slices a logical tensor back out
+(on TPU the slice lowers to a cheap sub-tile DMA; kernels/packed_gather is
+the explicit fused read path).  ``unpack()`` rebuilds the full parameter
+pytree for direct use by the model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .planner import BankPlan, PlanEntry
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(f"layer_{p.idx}")
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+class PackedParameterStore:
+    def __init__(self, params, plans: dict[int, BankPlan]):
+        self.treedef = jax.tree.structure(params)
+        flat = jax.tree_util.tree_flatten_with_path(params)[0]
+        self._leaf_order = [_path_str(p) for p, _ in flat]
+        self._leaf_shapes = {_path_str(p): tuple(l.shape) for p, l in flat}
+        base = {_path_str(p): leaf for p, leaf in flat}
+
+        class _ByPath:
+            """Resolves both plain paths and split-stacked 'path#k' slices."""
+
+            def __getitem__(self, path):
+                if "#" in path:
+                    root, k = path.rsplit("#", 1)
+                    return base[root][int(k)]
+                return base[path]
+
+            def items(self):
+                return base.items()
+
+        by_path = _ByPath()
+        self.plans = plans
+        self.banks: dict[tuple[int, int], jax.Array] = {}
+        self.entries: dict[str, tuple[int, int, PlanEntry]] = {}
+        self.plain: dict[str, jax.Array] = {}
+        packed_paths = set()
+        from . import tiles
+
+        for itemsize, plan in plans.items():
+            sub = tiles.TILE_ROWS.get(itemsize, 8)
+            for bi, bank in enumerate(plan.banks):
+                rows = sum(e.rows for e in bank)
+                cols = max(e.cols for e in bank)
+                prows = -(-rows // sub) * sub
+                pcols = -(-cols // tiles.LANES) * tiles.LANES
+                dtype = by_path[bank[0].path].dtype
+                buf = jnp.zeros((prows, pcols), dtype)
+                for e in bank:
+                    leaf = by_path[e.path].reshape(e.rows, e.cols)
+                    buf = jax.lax.dynamic_update_slice(buf, leaf, (e.row_offset, 0))
+                    self.entries[e.path] = (itemsize, bi, e)
+                    packed_paths.add(e.path)
+                self.banks[(itemsize, bi)] = buf
+        for path, leaf in by_path.items():
+            if path not in packed_paths:
+                self.plain[path] = leaf
+
+    # ------------------------------------------------------------------ API
+    def view(self, path: str) -> jax.Array:
+        if path in self.plain:
+            return self.plain[path]
+        itemsize, bi, e = self.entries[path]
+        bank = self.banks[(itemsize, bi)]
+        block = jax.lax.dynamic_slice(bank, (e.row_offset, 0), (e.rows, e.cols))
+        return block.reshape(e.shape)
+
+    def unpack(self):
+        """Rebuild the full parameter pytree (handles split-stacked leaves)."""
+        leaves = []
+        for p in self._leaf_order:
+            if p in self.plain or p in self.entries:
+                leaves.append(self.view(p).reshape(self._leaf_shapes[p]))
+            else:  # split-stacked: reassemble per-layer slices
+                n = self._leaf_shapes[p][0]
+                slices = [self.view(f"{p}#{k}") for k in range(n)]
+                leaves.append(
+                    jnp.stack(slices, axis=0).reshape(self._leaf_shapes[p])
+                )
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    def physical_bytes(self) -> int:
+        from . import tiles
+
+        total = sum(b.size * b.dtype.itemsize for b in self.banks.values())
+        total += sum(
+            tiles.padded_bytes(tuple(a.shape), a.dtype.itemsize)
+            for a in self.plain.values()
+        )
+        return total
+
+    def stats(self) -> dict:
+        out = {}
+        for itemsize, plan in self.plans.items():
+            out[itemsize] = dict(
+                banks=len(plan.banks),
+                packed_tensors=sum(len(b) for b in plan.banks),
+                unpacked_tensors=len(plan.unpacked),
+                padded_bytes_before=plan.padded_bytes_before,
+                padded_bytes_after=plan.padded_bytes_after,
+                saved_bytes=plan.saved_bytes,
+                efficiency_before=plan.efficiency_before(),
+                efficiency_after=plan.efficiency_after(),
+            )
+        return out

@@ -1,0 +1,343 @@
+"""GQA attention with RoPE, qk-norm, sliding windows, cross-attention, and a
+memory-efficient blockwise (flash-style) path for long sequences.
+
+All functions are pure JAX and GSPMD-friendly: no shard_map, so head counts
+that do not divide the model axis (hymba 25q/5kv, qwen2 14q/2kv) still lower
+— GSPMD pads the sharded dimension.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_rope, dense, dense_init, head_rms_norm
+
+NEG_INF = -1e30
+_U = jax.sharding.PartitionSpec.UNCONSTRAINED
+
+
+def _seq_shard(x, axis: int):
+    """Best-effort sequence-parallel constraint: shard dim `axis` over the
+    'model' mesh axis, leaving other dims unconstrained.  A no-op outside a
+    mesh context (host tests) or when the dim does not divide."""
+    try:
+        spec = [_U] * x.ndim
+        spec[axis] = "model"
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.PartitionSpec(*spec)
+        )
+    except Exception:
+        return x
+
+
+def _replicate_dims(x, axes):
+    try:
+        spec = [_U] * x.ndim
+        for a in axes:
+            spec[a] = None
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.PartitionSpec(*spec)
+        )
+    except Exception:
+        return x
+_BLOCK_KV = 1024  # KV block for the flash-style path
+
+
+def attn_init(cfg: ModelConfig, key, dtype) -> dict:
+    kq, kk, kv, ko, s1, s2 = jax.random.split(key, 6)
+    p = {
+        "q": dense_init(kq, cfg.d_model, cfg.attn_dim, dtype, cfg.qkv_bias),
+        "k": dense_init(kk, cfg.d_model, cfg.kv_dim, dtype, cfg.qkv_bias),
+        "v": dense_init(kv, cfg.d_model, cfg.kv_dim, dtype, cfg.qkv_bias),
+        "o": dense_init(ko, cfg.attn_dim, cfg.d_model, dtype, cfg.attn_out_bias),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.d_head,), dtype)
+        p["k_norm"] = jnp.ones((cfg.d_head,), dtype)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, params, x, kv_x, q_pos, k_pos, compute_dtype, rope: bool):
+    """Returns q (B,S,Hkv,G,dh), k/v (B,T,Hkv,dh)."""
+    b, s, _ = x.shape
+    t = kv_x.shape[1]
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    g = hq // hkv
+    q = dense(params["q"], x, compute_dtype).reshape(b, s, hq, dh)
+    k = dense(params["k"], kv_x, compute_dtype).reshape(b, t, hkv, dh)
+    v = dense(params["v"], kv_x, compute_dtype).reshape(b, t, hkv, dh)
+    if cfg.qk_norm:
+        q = head_rms_norm(params["q_norm"], q, cfg.norm_eps)
+        k = head_rms_norm(params["k_norm"], k, cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+        k = apply_rope(k, k_pos, cfg.rope_theta)
+    return q.reshape(b, s, hkv, g, dh), k, v
+
+
+def _mask_bias(q_pos, k_pos, window, causal: bool):
+    """(S, T) additive bias from positions. `window` may be a traced scalar;
+    window <= 0 means unlimited."""
+    dq = q_pos[:, None]
+    dk = k_pos[None, :]
+    ok = jnp.ones(dq.shape[:1] + dk.shape[1:], dtype=bool)
+    if causal:
+        ok = ok & (dk <= dq)
+    win_ok = (window <= 0) | (dq - dk < window)
+    ok = ok & win_ok
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa(q, k, v, bias, scores_dtype=jnp.float32):
+    """q (B,S,N,G,D), k/v (B,T,N,D), bias (S,T) -> (B,S,N,G,D).
+
+    ``scores_dtype`` controls the materialized score precision: fp32 for
+    training numerics; the serving path passes bf16 (halves the dominant
+    HBM term of long-context attention; probs renormalized in fp32 max/sum
+    via the softmax below which upcasts reductions)."""
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    scores = jnp.einsum("bsngd,btnd->bngst", q, k, preferred_element_type=scores_dtype)
+    scores = (scores * scale.astype(scores_dtype)
+              + bias[None, None, None, :, :].astype(scores_dtype))
+    if scores_dtype == jnp.float32:
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    else:
+        # serving: keep the S x T tensors in bf16; reductions in fp32
+        m = jnp.max(scores.astype(jnp.float32), axis=-1, keepdims=True)
+        p = jnp.exp(scores - m.astype(scores_dtype))
+        s = jnp.sum(p.astype(jnp.float32), axis=-1, keepdims=True)
+        probs = (p / jnp.maximum(s, 1e-30).astype(scores_dtype)).astype(q.dtype)
+    return jnp.einsum("bngst,btnd->bsngd", probs, v)
+
+
+def _sdpa_blockwise(q, k, v, q_pos, k_pos, window, causal: bool,
+                    scores_dtype=jnp.float32):
+    """Flash-style attention: scan over KV blocks with running max/sum.
+
+    Memory is O(S * block) instead of O(S * T); each block step is wrapped in
+    jax.checkpoint so the backward pass recomputes block scores.
+    """
+    b, s, n, g, d = q.shape
+    t = k.shape[1]
+    nblk = -(-t // _BLOCK_KV)
+    pad = nblk * _BLOCK_KV - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=2**30)  # masked out
+    k_blocks = k.reshape(b, nblk, _BLOCK_KV, n, d).swapaxes(0, 1)
+    v_blocks = v.reshape(b, nblk, _BLOCK_KV, n, d).swapaxes(0, 1)
+    p_blocks = k_pos.reshape(nblk, _BLOCK_KV)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    @jax.checkpoint
+    def step(carry, blk):
+        acc, row_max, row_sum = carry
+        kb, vb, pb = blk
+        bias = _mask_bias(q_pos, pb, window, causal)  # (S, blk)
+        # the (S, blk) score/prob tensors stay in scores_dtype (bf16 on the
+        # serving path — the dominant HBM term); running max/sum and the
+        # accumulator remain fp32
+        scores = (
+            jnp.einsum("bsngd,btnd->bngst", q, kb, preferred_element_type=scores_dtype)
+            * scale.astype(scores_dtype)
+            + bias[None, None, None, :, :].astype(scores_dtype)
+        )
+        blk_max = jnp.max(scores.astype(jnp.float32), axis=-1)
+        new_max = jnp.maximum(row_max, blk_max)
+        correction = jnp.exp(row_max - new_max)
+        probs = jnp.exp(scores - new_max[..., None].astype(scores_dtype))
+        new_sum = row_sum * correction + jnp.sum(probs.astype(jnp.float32), axis=-1)
+        upd = jnp.einsum("bngst,btnd->bsngd", probs.astype(q.dtype), vb)
+        acc = acc * correction.transpose(0, 3, 1, 2)[..., None] + upd.astype(jnp.float32)
+        return (acc, new_max, new_sum), None
+
+    acc0 = jnp.zeros((b, s, n, g, d), jnp.float32)
+    max0 = jnp.full((b, n, g, s), NEG_INF, jnp.float32)
+    sum0 = jnp.zeros((b, n, g, s), jnp.float32)
+    (acc, _, row_sum), _ = jax.lax.scan(step, (acc0, max0, sum0), (k_blocks, v_blocks, p_blocks))
+    out = acc / jnp.maximum(row_sum, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return out.astype(q.dtype)
+
+
+def _sdpa_windowed_blocks(q, k, v, window: int, block_q: int = 1024,
+                          scores_dtype=jnp.float32):
+    """Sliding-window attention with *static* block skipping.
+
+    For a window of W tokens, each q block [i*Bq, (i+1)*Bq) can only attend
+    to k in [i*Bq - W + 1, (i+1)*Bq) — a contiguous, statically-known slice.
+    We compute plain softmax attention per q block against that slice and
+    never touch the other ceil(S/Bq) - 2 KV blocks, cutting both the score
+    FLOPs and the materialized-score bytes by ~S/(W + Bq).
+
+    Assumes self-attention with q_pos == k_pos == arange(S) (the prefill /
+    train path); requires a static int window > 0.
+    """
+    b, s, n, g, d = q.shape
+    bq = min(block_q, s)
+    nblk = -(-s // bq)
+    outs = []
+    for i in range(nblk):
+        q0, q1 = i * bq, min((i + 1) * bq, s)
+        k0 = max(0, q0 - window + 1)
+        qi = q[:, q0:q1]
+        ki = k[:, k0:q1]
+        vi = v[:, k0:q1]
+        bias = _mask_bias(
+            jnp.arange(q0, q1), jnp.arange(k0, q1), window, causal=True
+        )
+        outs.append(_sdpa(qi, ki, vi, bias, scores_dtype))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attn_apply(
+    cfg: ModelConfig,
+    params: dict,
+    x: jax.Array,
+    q_pos: jax.Array,
+    window,  # traced scalar; <=0 -> full attention
+    kv_x: jax.Array | None = None,
+    k_pos: jax.Array | None = None,
+    causal: bool = True,
+    rope: bool = True,
+    return_kv: bool = False,
+    scores_dtype=jnp.float32,
+):
+    """Full-sequence attention (training / prefill). Cross-attn when kv_x set.
+
+    With ``return_kv`` also returns the projected (k, v) — used by prefill to
+    populate the decode cache without recomputation."""
+    compute_dtype = jnp.dtype(cfg.dtype)
+    kv_src = x if kv_x is None else kv_x
+    k_pos = q_pos if k_pos is None else k_pos
+    q, k, v = _project_qkv(cfg, params, x, kv_src, q_pos, k_pos, compute_dtype, rope)
+    if cfg.attn_seq_shard:
+        # SP attention: q/scores sharded on sequence; K/V replicated over the
+        # model axis (a small all-gather, vs score-sized partial-sum
+        # all-reduces when GSPMD splits the contraction instead)
+        q = _seq_shard(q, 1)
+        k = _replicate_dims(k, (1, 2, 3))
+        v = _replicate_dims(v, (1, 2, 3))
+    windowed = (
+        isinstance(window, int) and window > 0 and causal and kv_x is None
+        and kv_src.shape[1] > _BLOCK_KV
+    )
+    if windowed:
+        out = _sdpa_windowed_blocks(q, k, v, window, scores_dtype=scores_dtype)
+    elif kv_src.shape[1] > _BLOCK_KV:
+        out = _sdpa_blockwise(
+            q, k, v, q_pos, k_pos, window, causal, scores_dtype=scores_dtype
+        )
+    else:
+        bias = _mask_bias(q_pos, k_pos, window, causal)
+        out = _sdpa(q, k, v, bias, scores_dtype)
+    b, s = x.shape[:2]
+    out = dense(params["o"], out.reshape(b, s, cfg.attn_dim), compute_dtype)
+    if return_kv:
+        return out, k, v
+    return out
+
+
+def attn_decode(
+    cfg: ModelConfig,
+    params: dict,
+    x: jax.Array,  # (B, 1, D) new token hidden
+    k_cache: jax.Array,  # (B, T, Hkv, dh)
+    v_cache: jax.Array,
+    pos: jax.Array,  # scalar int32: index of the new token
+    window,  # traced scalar; <=0 full
+    rope: bool = True,
+    update_cache: bool = True,
+    append_self: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step against a (possibly sliding-window) KV cache.
+
+    Two cache disciplines:
+    * ``update_cache=True`` — legacy: write the token into the cache first
+      and attend over it; returns (out, new_k_cache, new_v_cache).  Flowing
+      whole caches through the layer scan makes XLA rewrite the entire
+      cache every step — use only for small caches.
+    * ``update_cache=False, append_self=True`` — *deferred write*: attend
+      over the frozen cache (positions < pos) plus the fresh (k, v) of this
+      token; returns (out, k_new, v_new) and the caller performs ONE small
+      stacked dynamic-update-slice for all layers after the scan (decode
+      write traffic drops from O(cache) to O(tokens)).
+
+    For windowed layers only the last `window` cache entries are sliced and
+    attended (bounding the memory term); global layers read the whole cache.
+    """
+    compute_dtype = jnp.dtype(cfg.dtype)
+    q_pos = pos[None] if pos.ndim == 0 else pos
+    q, k_new, v_new = _project_qkv(
+        cfg, params, x, x, q_pos[None, :], q_pos[None, :], compute_dtype, rope
+    )
+    if update_cache:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k_new.astype(k_cache.dtype), pos, axis=1
+        )
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v_new.astype(v_cache.dtype), pos, axis=1
+        )
+    t = k_cache.shape[1]
+    # hist = number of already-cached positions to attend (self excluded in
+    # deferred mode — it is appended explicitly below)
+    self_in_cache = update_cache
+    if isinstance(window, int) and 0 < window < t:
+        span = window if self_in_cache else window - 1
+        start = jnp.clip(pos - span + (1 if self_in_cache else 0), 0, t - span)
+        k_att = jax.lax.dynamic_slice_in_dim(k_cache, start, span, axis=1)
+        v_att = jax.lax.dynamic_slice_in_dim(v_cache, start, span, axis=1)
+        k_pos = start + jnp.arange(span, dtype=jnp.int32)
+    else:
+        k_att, v_att = k_cache, v_cache
+        k_pos = jnp.arange(t, dtype=jnp.int32)
+    valid = (k_pos <= pos) if self_in_cache else (k_pos < pos)
+    if not isinstance(window, int):
+        valid = valid & ((window <= 0) | (pos - k_pos < window))
+    k_att = k_att.astype(compute_dtype)
+    v_att = v_att.astype(compute_dtype)
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)[None, :]
+    b = x.shape[0]
+    if update_cache or not append_self:
+        out = _sdpa(q, k_att, v_att, bias, scores_dtype=compute_dtype)
+    else:
+        # deferred write: two-part softmax merge of (frozen cache, self) —
+        # concatenating along the sharded cache-seq dim would make GSPMD
+        # gather the cache; the merge keeps all cross-shard reductions at
+        # (B, heads) scalars.
+        out = _sdpa_merge_self(q, k_att, v_att, bias, k_new, v_new)
+    out = dense(params["o"], out.reshape(b, 1, cfg.attn_dim), compute_dtype)
+    if update_cache:
+        return out, k_cache, v_cache
+    return out, k_new, v_new
+
+
+def _sdpa_merge_self(q, k_cache, v_cache, bias, k_new, v_new):
+    """Decode attention over [cache, self] without concatenation.
+
+    q (B,1,N,G,D); k/v_cache (B,T,N,D); bias (1,T); k/v_new (B,1,N,D).
+    Flash-style: unnormalized cache attention merged with the self term.
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    sc = jnp.einsum(
+        "bsngd,btnd->bngst", q, k_cache, preferred_element_type=jnp.float32
+    ) * scale + bias[None, None, None, :, :]
+    m_c = jnp.max(sc, axis=-1, keepdims=True)  # (B,N,G,1,1)
+    p = jnp.exp(sc - m_c)
+    s_c = jnp.sum(p, axis=-1, keepdims=True)
+    acc = jnp.einsum(
+        "bngst,btnd->bsngd", p.astype(q.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )  # (B,1,N,G,D)
+    s_self = jnp.einsum(
+        "bsngd,btnd->bngst", q, k_new, preferred_element_type=jnp.float32
+    ) * scale  # (B,N,G,1,1)
+    m = jnp.maximum(m_c, s_self)
+    alpha = jnp.exp(m_c - m)  # (B,N,G,1,1)
+    beta = jnp.exp(s_self - m)
+    alpha_b = alpha[:, :, :, 0, 0][:, None, :, :, None]  # (B,1,N,G,1)
+    beta_b = beta[:, :, :, 0, 0][:, None, :, :, None]
+    num = acc * alpha_b + v_new[:, :, :, None, :].astype(jnp.float32) * beta_b
+    den = (s_c * alpha + beta)[:, :, :, 0, 0][:, None, :, :, None]
+    return (num / jnp.maximum(den, 1e-30)).astype(q.dtype)

@@ -1,0 +1,257 @@
+"""Decoder/encoder blocks assembled from the mixer + MLP primitives.
+
+Block kinds (cfg.block):
+  attention — pre-norm GQA attention + (MoE or dense) MLP
+  mamba2    — pre-norm SSD mixer only (no MLP, as in mamba2-1.3b)
+  hymba     — parallel attention + SSM heads fused by per-branch RMSNorm
+              averaging (Hymba, arXiv:2411.13676), then MLP
+Whisper uses `encoder` blocks (bidirectional attention) and decoder blocks
+with cross-attention (`use_cross=True`).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attn_apply, attn_decode, attn_init
+from .config import ModelConfig
+from .layers import apply_norm, mlp_apply, mlp_init, norm_init
+from .mamba2 import ssm_apply, ssm_decode, ssm_init
+from .moe import moe_apply, moe_init
+
+
+def _branch_norm(scale: jax.Array, x: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def block_init(cfg: ModelConfig, key, dtype, use_cross: bool = False) -> dict:
+    ks = jax.random.split(key, 8)
+    p: dict = {"norm1": norm_init(cfg, cfg.d_model, dtype)}
+    if cfg.block in ("attention", "hymba"):
+        p["attn"] = attn_init(cfg, ks[0], dtype)
+    if cfg.block in ("mamba2", "hymba"):
+        p["ssm"] = ssm_init(cfg, ks[1], dtype)
+    if cfg.block == "hymba":
+        p["branch_a"] = jnp.ones((cfg.d_model,), dtype)
+        p["branch_s"] = jnp.ones((cfg.d_model,), dtype)
+    if use_cross:
+        p["norm_cross"] = norm_init(cfg, cfg.d_model, dtype)
+        p["cross"] = attn_init(cfg, ks[2], dtype)
+    if cfg.d_ff > 0:
+        p["norm2"] = norm_init(cfg, cfg.d_model, dtype)
+        if cfg.n_experts > 0:
+            p["moe"] = moe_init(cfg, ks[3], dtype)
+        else:
+            p["mlp"] = mlp_init(cfg, ks[3], dtype)
+    return p
+
+
+def _mixer_train(cfg, p, h, positions, window, compute_dtype, rope=True):
+    """The token mixer on a full sequence. Returns the residual branch."""
+    hn = apply_norm(cfg, p["norm1"], h)
+    if cfg.block == "attention":
+        return attn_apply(cfg, p["attn"], hn, positions, window, rope=rope)
+    if cfg.block == "mamba2":
+        return ssm_apply(cfg, p["ssm"], hn, compute_dtype)
+    if cfg.block == "hymba":
+        a = attn_apply(cfg, p["attn"], hn, positions, window, rope=rope)
+        s = ssm_apply(cfg, p["ssm"], hn, compute_dtype)
+        return 0.5 * (
+            _branch_norm(p["branch_a"], a, cfg.norm_eps)
+            + _branch_norm(p["branch_s"], s, cfg.norm_eps)
+        )
+    raise ValueError(cfg.block)
+
+
+def block_apply_train(
+    cfg: ModelConfig,
+    p: dict,
+    h: jax.Array,
+    positions: jax.Array,
+    window: int,
+    cross_kv: jax.Array | None = None,
+    cross_pos: jax.Array | None = None,
+    causal: bool = True,
+    rope: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence block. Returns (h, aux_loss)."""
+    compute_dtype = jnp.dtype(cfg.dtype)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.block == "attention" and not causal:
+        # encoder block: bidirectional attention
+        hn = apply_norm(cfg, p["norm1"], h)
+        h = h + attn_apply(
+            cfg, p["attn"], hn, positions, 0, causal=False, rope=False
+        )
+    else:
+        h = h + _mixer_train(cfg, p, h, positions, window, compute_dtype, rope=rope)
+    if "cross" in p:
+        hn = apply_norm(cfg, p["norm_cross"], h)
+        h = h + attn_apply(
+            cfg,
+            p["cross"],
+            hn,
+            positions,
+            0,
+            kv_x=cross_kv,
+            k_pos=cross_pos,
+            causal=False,
+            rope=False,
+        )
+    if cfg.d_ff > 0:
+        hn = apply_norm(cfg, p["norm2"], h)
+        if cfg.n_experts > 0:
+            mlp_out, aux = moe_apply(cfg, p["moe"], hn, compute_dtype)
+        else:
+            mlp_out = mlp_apply(cfg, p["mlp"], hn, compute_dtype)
+        h = h + mlp_out
+    return h, aux
+
+
+def block_prefill(
+    cfg: ModelConfig,
+    p: dict,
+    h: jax.Array,
+    positions: jax.Array,
+    window: int,
+    cache_len: int,
+    cross_kv: jax.Array | None = None,
+    cross_pos: jax.Array | None = None,
+    rope: bool = True,
+) -> tuple[jax.Array, dict]:
+    """Full-sequence block that also emits the decode cache (padded to
+    ``cache_len``). Returns (h, cache)."""
+    compute_dtype = jnp.dtype(cfg.dtype)
+    cache: dict = {}
+    s = h.shape[1]
+
+    def pad_cache(kv):
+        return jnp.pad(kv, ((0, 0), (0, cache_len - s), (0, 0), (0, 0)))
+
+    hn = apply_norm(cfg, p["norm1"], h)
+    if cfg.block == "attention":
+        out, k, v = attn_apply(
+            cfg, p["attn"], hn, positions, window, rope=rope, return_kv=True,
+            scores_dtype=compute_dtype,
+        )
+        cache["k"], cache["v"] = pad_cache(k), pad_cache(v)
+        h = h + out
+    elif cfg.block == "mamba2":
+        out, ssm_cache = ssm_apply(cfg, p["ssm"], hn, compute_dtype, return_state=True)
+        cache["ssm"] = ssm_cache
+        h = h + out
+    elif cfg.block == "hymba":
+        a, k, v = attn_apply(
+            cfg, p["attn"], hn, positions, window, rope=rope, return_kv=True,
+            scores_dtype=compute_dtype,
+        )
+        s_out, ssm_cache = ssm_apply(cfg, p["ssm"], hn, compute_dtype, return_state=True)
+        cache["k"], cache["v"], cache["ssm"] = pad_cache(k), pad_cache(v), ssm_cache
+        h = h + 0.5 * (
+            _branch_norm(p["branch_a"], a, cfg.norm_eps)
+            + _branch_norm(p["branch_s"], s_out, cfg.norm_eps)
+        )
+    if "cross" in p:
+        hn = apply_norm(cfg, p["norm_cross"], h)
+        out, ck, cv = attn_apply(
+            cfg,
+            p["cross"],
+            hn,
+            positions,
+            0,
+            kv_x=cross_kv,
+            k_pos=cross_pos,
+            causal=False,
+            rope=False,
+            return_kv=True,
+            scores_dtype=compute_dtype,
+        )
+        cache["cross_k"], cache["cross_v"] = ck, cv
+        h = h + out
+    if cfg.d_ff > 0:
+        hn = apply_norm(cfg, p["norm2"], h)
+        if cfg.n_experts > 0:
+            mlp_out, _ = moe_apply(cfg, p["moe"], hn, compute_dtype)
+        else:
+            mlp_out = mlp_apply(cfg, p["mlp"], hn, compute_dtype)
+        h = h + mlp_out
+    return h, cache
+
+
+def block_decode(
+    cfg: ModelConfig,
+    p: dict,
+    h: jax.Array,  # (B, 1, D)
+    cache: dict,
+    pos: jax.Array,
+    window: int,
+    rope: bool = True,
+    defer_cache_write: bool = True,
+) -> tuple[jax.Array, dict]:
+    """Single-token block step against the cache.
+
+    With ``defer_cache_write`` (production decode path) the returned dict
+    carries only the new token's (k, v) — the caller batches one stacked
+    cache write for all layers after the scan."""
+    compute_dtype = jnp.dtype(cfg.dtype)
+    new_cache = dict(cache)
+    hn = apply_norm(cfg, p["norm1"], h)
+    if cfg.block == "attention":
+        out, k, v = attn_decode(
+            cfg, p["attn"], hn, cache["k"], cache["v"], pos, window, rope=rope,
+            update_cache=not defer_cache_write,
+        )
+        if defer_cache_write:
+            new_cache = {"k_new": k, "v_new": v}
+        else:
+            new_cache["k"], new_cache["v"] = k, v
+        h = h + out
+    elif cfg.block == "mamba2":
+        out, new_ssm = ssm_decode(cfg, p["ssm"], hn, cache["ssm"], compute_dtype)
+        if defer_cache_write:
+            new_cache = {"ssm": new_ssm}
+        else:
+            new_cache["ssm"] = new_ssm
+        h = h + out
+    elif cfg.block == "hymba":
+        a, k, v = attn_decode(
+            cfg, p["attn"], hn, cache["k"], cache["v"], pos, window, rope=rope,
+            update_cache=not defer_cache_write,
+        )
+        s, new_ssm = ssm_decode(cfg, p["ssm"], hn, cache["ssm"], compute_dtype)
+        if defer_cache_write:
+            new_cache = {"k_new": k, "v_new": v, "ssm": new_ssm}
+        else:
+            new_cache["k"], new_cache["v"], new_cache["ssm"] = k, v, new_ssm
+        h = h + 0.5 * (
+            _branch_norm(p["branch_a"], a, cfg.norm_eps)
+            + _branch_norm(p["branch_s"], s, cfg.norm_eps)
+        )
+    if "cross" in p:
+        hn = apply_norm(cfg, p["norm_cross"], h)
+        # cross K/V are precomputed at prefill; attend, never update.
+        # pos=T so every encoder position is valid.
+        out, _, _ = attn_decode(
+            cfg,
+            p["cross"],
+            hn,
+            cache["cross_k"],
+            cache["cross_v"],
+            jnp.asarray(cache["cross_k"].shape[1], jnp.int32),
+            0,
+            rope=False,
+            update_cache=False,
+            append_self=False,
+        )
+        h = h + out
+    if cfg.d_ff > 0:
+        hn = apply_norm(cfg, p["norm2"], h)
+        if cfg.n_experts > 0:
+            mlp_out, _ = moe_apply(cfg, p["moe"], hn, compute_dtype)
+        else:
+            mlp_out = mlp_apply(cfg, p["mlp"], hn, compute_dtype)
+        h = h + mlp_out
+    return h, new_cache

@@ -1,0 +1,107 @@
+"""Shared NN building blocks (pure JAX, explicit parameter pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+
+def truncated_normal_init(key, shape, scale: float, dtype) -> jax.Array:
+    stddev = scale / np.sqrt(max(1, shape[0] if len(shape) >= 2 else 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * stddev).astype(
+        dtype
+    )
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False) -> dict:
+    p = {"kernel": truncated_normal_init(key, (d_in, d_out), 1.0, dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(params: dict, x: jax.Array, compute_dtype) -> jax.Array:
+    y = jnp.matmul(x.astype(compute_dtype), params["kernel"].astype(compute_dtype))
+    if "bias" in params:
+        y = y + params["bias"].astype(compute_dtype)
+    return y
+
+
+def norm_init(cfg: ModelConfig, d: int, dtype) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    """RMSNorm / LayerNorm in fp32 accumulation, output in x.dtype."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mean = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x32 - mean), axis=-1, keepdims=True)
+        y = (x32 - mean) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * params["scale"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def head_rms_norm(scale: jax.Array, x: jax.Array, eps: float) -> jax.Array:
+    """Per-head qk-norm (Qwen3): RMS over d_head."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def activation(name: str, x: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(f"unknown activation {name!r}")
+
+
+# ----------------------------------------------------------------- RoPE
+def rope_freqs(d_head: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, d_head, 2, dtype=np.float64) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, d_head); positions: (..., seq)."""
+    d_head = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d_head, theta), dtype=jnp.float32)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., S, 1, d/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- dense MLP
+def mlp_init(cfg: ModelConfig, key, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "up": dense_init(k1, cfg.d_model, cfg.d_ff, dtype, cfg.mlp_bias),
+        "down": dense_init(k2, cfg.d_ff, cfg.d_model, dtype, cfg.mlp_bias),
+    }
+    if cfg.mlp_gated:
+        p["gate"] = dense_init(k3, cfg.d_model, cfg.d_ff, dtype, cfg.mlp_bias)
+    return p
+
+
+def mlp_apply(cfg: ModelConfig, params: dict, x: jax.Array, compute_dtype) -> jax.Array:
+    up = dense(params["up"], x, compute_dtype)
+    if cfg.mlp_gated:
+        gate = activation(cfg.mlp_act, dense(params["gate"], x, compute_dtype))
+        h = gate * up
+    else:
+        h = activation(cfg.mlp_act, up)
+    return dense(params["down"], h, compute_dtype)

@@ -1,0 +1,257 @@
+"""Mamba-2 (SSD — state space duality, arXiv:2405.21060) block in pure JAX.
+
+The chunked SSD algorithm: within chunks of length L the output is a masked
+(C B^T)-attention against decay factors (dense matmuls, MXU-friendly); the
+inter-chunk recurrence carries the (H, P, N) state with a lax.scan whose
+per-step cost is tiny.  Decode is the exact single-step SSM recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense, dense_init, truncated_normal_init
+
+
+
+def ssm_init(cfg: ModelConfig, key, dtype) -> dict:
+    """Parameters of one mamba2 mixer (used standalone and inside hymba).
+
+    The reference implementation fuses [z|x|B|C|dt] into one in_proj and
+    slices; under tensor parallelism the slice boundaries (4096/8192/8448/
+    8512 for mamba2-1.3b) do not align with the 16-way shards and GSPMD
+    emits per-layer collective-permute re-alignments.  We keep *separate*
+    per-stream projections (same math, same total parameters) so every
+    stream is shard-aligned — the TP-native layout.  Same for the depthwise
+    conv: one (K, C) kernel per stream.
+    """
+    di, h, n = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state
+    k1, k2, k3, k4, k5, k6, k7, k8 = jax.random.split(key, 8)
+    return {
+        "z_proj": dense_init(k1, cfg.d_model, di, dtype),
+        "x_proj": dense_init(k2, cfg.d_model, di, dtype),
+        "b_proj": dense_init(k3, cfg.d_model, n, dtype),
+        "c_proj": dense_init(k4, cfg.d_model, n, dtype),
+        "dt_proj": dense_init(k5, cfg.d_model, h, dtype),
+        "conv_x": truncated_normal_init(k6, (cfg.ssm_conv_width, di), 1.0, dtype),
+        "conv_x_bias": jnp.zeros((di,), dtype),
+        "conv_b": truncated_normal_init(k7, (cfg.ssm_conv_width, n), 1.0, dtype),
+        "conv_b_bias": jnp.zeros((n,), dtype),
+        "conv_c": truncated_normal_init(k8, (cfg.ssm_conv_width, n), 1.0, dtype),
+        "conv_c_bias": jnp.zeros((n,), dtype),
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)).astype(dtype),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "d_skip": jnp.ones((h,), dtype),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": dense_init(k3, di, cfg.d_model, dtype),
+    }
+
+
+def _project_streams(cfg: ModelConfig, params: dict, x_in, compute_dtype):
+    """Per-stream projections; returns (z, x, b, c, dt) pre-conv."""
+    z = dense(params["z_proj"], x_in, compute_dtype)
+    xs = dense(params["x_proj"], x_in, compute_dtype)
+    bs = dense(params["b_proj"], x_in, compute_dtype)
+    cs = dense(params["c_proj"], x_in, compute_dtype)
+    dt = dense(params["dt_proj"], x_in, compute_dtype)
+    return z, xs, bs, cs, dt
+
+
+def _gated_norm(scale: jax.Array, y: jax.Array, z: jax.Array, eps: float) -> jax.Array:
+    """Mamba2's RMSNorm(y * silu(z)) output gate."""
+    dt = y.dtype
+    g = (y * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    return (g * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def _causal_conv(kernel: jax.Array, bias: jax.Array, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, C) with a (K, C) kernel."""
+    kweight = kernel.astype(x.dtype)
+    kw = kweight.shape[0]
+    xpad = jnp.pad(x, ((0, 0), (kw - 1, 0), (0, 0)))
+    out = sum(
+        xpad[:, i : i + x.shape[1], :] * kweight[i][None, None, :] for i in range(kw)
+    )
+    return jax.nn.silu(out + bias.astype(x.dtype))
+
+
+def _segsum_mask(log_a: jax.Array) -> jax.Array:
+    """log_a: (..., L) -> (..., L, L) lower-tri matrix exp(sum_{j<t<=i} log_a).
+
+    The mask is applied *inside* the exp (large-negative fill) so the
+    discarded upper triangle — where the raw difference is large and
+    positive — can neither overflow forward nor poison gradients through
+    the where (inf * 0 -> NaN)."""
+    csum = jnp.cumsum(log_a, axis=-1)
+    diff = csum[..., :, None] - csum[..., None, :]  # (..., i, j)
+    il = jnp.tril(jnp.ones(log_a.shape[-1:] * 2, dtype=bool))
+    return jnp.exp(jnp.where(il, diff, -1e30))
+
+
+def ssm_apply(
+    cfg: ModelConfig, params: dict, x_in: jax.Array, compute_dtype,
+    return_state: bool = False,
+):
+    """Full-sequence SSD. x_in: (B, S, D) -> (B, S, D).
+
+    With ``return_state`` also returns the decode cache dict (final SSM state
+    + conv tail) so prefill can hand off to single-step decoding."""
+    b, s_orig, _ = x_in.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    lchunk = min(cfg.ssm_chunk, s_orig)
+    pad = (-s_orig) % lchunk
+    s = s_orig + pad
+    nc = s // lchunk
+
+    z, xs_raw, bs_raw, cs_raw, dt = _project_streams(cfg, params, x_in, compute_dtype)
+    xs_conv = _causal_conv(params["conv_x"], params["conv_x_bias"], xs_raw)
+    bmat = _causal_conv(params["conv_b"], params["conv_b_bias"], bs_raw)
+    cmat = _causal_conv(params["conv_c"], params["conv_c_bias"], cs_raw)
+    if pad:
+        xs_conv = jnp.pad(xs_conv, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    xs = xs_conv.reshape(b, s, h, p)
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # (B, S, H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # (H,)
+    log_a = dt * a[None, None, :]  # (B, S, H) negative
+    xdt = xs.astype(jnp.float32) * dt[..., None]  # dt-weighted input
+    if pad:
+        # padded steps must be identity on the state: decay 1, no input
+        valid = (jnp.arange(s) < s_orig)[None, :]
+        log_a = jnp.where(valid[..., None], log_a, 0.0)
+        xdt = jnp.where(valid[..., None, None], xdt, 0.0)
+        bmat = jnp.where(valid[..., None], bmat, 0.0)
+
+    # reshape into chunks: (B, C, L, ...)
+    xc = xdt.reshape(b, nc, lchunk, h, p)
+    bc = bmat.reshape(b, nc, lchunk, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, lchunk, n).astype(jnp.float32)
+    la = log_a.reshape(b, nc, lchunk, h)
+
+    # --- intra-chunk (diagonal blocks): masked (C B^T) attention.
+    # The L x L decay mask and C B^T products are the memory hot spot of the
+    # SSD chunk algorithm (per-head L^2 tensors); they are computed in the
+    # compute dtype (bf16 on TPU) with fp32 accumulation — decay cumsums
+    # stay fp32 for stability.  (Perf iteration recorded in EXPERIMENTS.md.)
+    lmask = _segsum_mask(la.transpose(0, 1, 3, 2))  # (B, C, H, L, L): [h,i,j]
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)  # (B, C, L, L)
+    y_diag = jnp.einsum(
+        "bcij,bchij,bcjhp->bcihp",
+        cb.astype(compute_dtype),
+        lmask.astype(compute_dtype),
+        xc.astype(compute_dtype),
+        preferred_element_type=jnp.float32,
+    )
+
+    # --- chunk summaries: state contributed by each chunk
+    csum = jnp.cumsum(la, axis=2)  # (B, C, L, H)
+    decay_to_end = jnp.exp(csum[:, :, -1:, :] - csum)  # (B, C, L, H)
+    states = jnp.einsum(
+        "bcln,bclh,bclhp->bchpn",
+        bc.astype(compute_dtype),
+        decay_to_end.astype(compute_dtype),
+        xc.astype(compute_dtype),
+        preferred_element_type=jnp.float32,
+    )
+    chunk_decay = jnp.exp(csum[:, :, -1, :])  # (B, C, H) total decay per chunk
+
+    # --- inter-chunk recurrence (tiny per-step state, sequential scan)
+    def step(h_prev, inputs):
+        st, dec = inputs  # (B,H,P,N), (B,H)
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev  # emit the state *entering* the chunk
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    h_final, h_in = jax.lax.scan(
+        step, h0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1))
+    )
+    h_in = h_in.swapaxes(0, 1)  # (B, C, H, P, N) state entering each chunk
+
+    # --- off-diagonal: contribution of previous chunks' state
+    decay_from_start = jnp.exp(csum)  # (B, C, L, H)
+    y_off = jnp.einsum(
+        "bcln,bclh,bchpn->bclhp",
+        cc.astype(compute_dtype),
+        decay_from_start.astype(compute_dtype),
+        h_in.astype(compute_dtype),
+        preferred_element_type=jnp.float32,
+    )
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    y = y + xs.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, di)[:, :s_orig].astype(compute_dtype)
+    y = _gated_norm(params["norm_scale"], y, z, cfg.norm_eps)
+    out = dense(params["out_proj"], y, compute_dtype)
+    if return_state:
+        # decode's conv cache holds the *pre-conv* input tails per stream
+        kw = cfg.ssm_conv_width - 1
+
+        def tail(stream):
+            t_ = stream[:, max(0, s_orig - kw) : s_orig, :]
+            if s_orig < kw:  # left-pad zeros (conv history before t=0)
+                t_ = jnp.pad(t_, ((0, 0), (kw - s_orig, 0), (0, 0)))
+            return t_.astype(compute_dtype)
+
+        cache = {
+            "conv": jnp.concatenate(
+                [tail(xs_raw), tail(bs_raw), tail(cs_raw)], axis=-1
+            ),
+            "state": h_final,
+        }
+        return out, cache
+    return out
+
+
+def ssm_init_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    conv_ch = di + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, h, p, n), jnp.float32),
+    }
+
+
+def ssm_decode(
+    cfg: ModelConfig, params: dict, x_in: jax.Array, cache: dict, compute_dtype
+) -> tuple[jax.Array, dict]:
+    """One-token SSM step. x_in: (B, 1, D)."""
+    b = x_in.shape[0]
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xs_raw, bs_raw, cs_raw, dt = _project_streams(cfg, params, x_in, compute_dtype)
+    new_tok = jnp.concatenate([xs_raw, bs_raw, cs_raw], axis=-1)
+    window = jnp.concatenate([cache["conv"].astype(compute_dtype), new_tok], axis=1)
+    kweight = jnp.concatenate(
+        [params["conv_x"], params["conv_b"], params["conv_c"]], axis=-1
+    ).astype(compute_dtype)
+    kbias = jnp.concatenate(
+        [params["conv_x_bias"], params["conv_b_bias"], params["conv_c_bias"]],
+        axis=-1,
+    ).astype(compute_dtype)
+    conv_out = jnp.einsum("bkc,kc->bc", window, kweight) + kbias
+    conv_out = jax.nn.silu(conv_out)[:, None, :]  # (B, 1, C)
+    new_conv_cache = window[:, 1:, :].astype(cache["conv"].dtype)
+
+    xs = conv_out[..., :di].reshape(b, h, p).astype(jnp.float32)
+    bvec = conv_out[..., di : di + n].reshape(b, n).astype(jnp.float32)
+    cvec = conv_out[..., di + n :].reshape(b, n).astype(jnp.float32)
+    dt1 = jax.nn.softplus(
+        dt[:, 0, :].astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # (B, H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt1 * a[None, :])  # (B, H)
+    xdt = xs * dt1[..., None]  # (B, H, P)
+    state = cache["state"] * decay[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xdt, bvec
+    )
+    y = jnp.einsum("bhpn,bn->bhp", state, cvec)
+    y = y + xs * params["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, di).astype(compute_dtype)
+    y = _gated_norm(params["norm_scale"], y, z, cfg.norm_eps)
+    out = dense(params["out_proj"], y, compute_dtype)
+    return out, {"conv": new_conv_cache, "state": state}

@@ -1,0 +1,311 @@
+"""Top-level model: init, training loss, prefill, and decode.
+
+Layers are *stacked* (leading dim = n_layers) and executed with
+``jax.lax.scan`` — essential to keep XLA compile time sane for 40-layer
+models on the dry-run host.  Architectures with mixed attention windows
+(hymba: 3 global layers among sliding-window layers) are handled by
+*segmented* scans: contiguous runs of layers sharing a static window are
+scanned together, so windows stay compile-time constants (static cache
+slicing in decode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blocks import block_apply_train, block_decode, block_init, block_prefill
+from .config import ModelConfig
+from .layers import dense_init, norm_init, apply_norm, truncated_normal_init
+from .mamba2 import ssm_init_cache
+
+
+# ------------------------------------------------------------------ helpers
+def tree_slice(tree, start: int, end: int):
+    return jax.tree.map(lambda x: x[start:end], tree)
+
+
+def layer_segments(cfg: ModelConfig) -> list[tuple[int, int, int]]:
+    """Contiguous (start, end, window) runs of layers with equal window."""
+    if cfg.sliding_window <= 0:
+        return [(0, cfg.n_layers, 0)]
+    segs: list[tuple[int, int, int]] = []
+    start = 0
+    cur_win = 0 if cfg.is_global_layer(0) else cfg.sliding_window
+    for i in range(1, cfg.n_layers):
+        win = 0 if cfg.is_global_layer(i) else cfg.sliding_window
+        if win != cur_win:
+            segs.append((start, i, cur_win))
+            start, cur_win = i, win
+    segs.append((start, cfg.n_layers, cur_win))
+    return segs
+
+
+def sinusoidal_positions(seq: int, d: int) -> np.ndarray:
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    angle = pos / np.power(10_000.0, dim / d)
+    out = np.zeros((seq, d), np.float32)
+    out[:, 0::2] = np.sin(angle)
+    out[:, 1::2] = np.cos(angle)
+    return out
+
+
+# --------------------------------------------------------------------- init
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_emb, k_head, k_layers, k_enc, k_extra = jax.random.split(key, 5)
+    params: dict = {
+        "embed": truncated_normal_init(
+            k_emb, (cfg.padded_vocab, cfg.d_model), 1.0, dtype
+        ),
+        "final_norm": norm_init(cfg, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, cfg.d_model, cfg.padded_vocab, dtype)
+    lkeys = jax.random.split(k_layers, cfg.n_layers)
+    params["layers"] = jax.vmap(
+        lambda k: block_init(cfg, k, dtype, use_cross=cfg.encoder_decoder)
+    )(lkeys)
+    if cfg.encoder_decoder:
+        ekeys = jax.random.split(k_enc, cfg.n_encoder_layers)
+        params["enc_layers"] = jax.vmap(lambda k: block_init(cfg, k, dtype))(ekeys)
+        params["enc_norm"] = norm_init(cfg, cfg.d_model, dtype)
+        params["dec_pos"] = truncated_normal_init(
+            k_extra, (cfg.max_target_len, cfg.d_model), 1.0, dtype
+        )
+    return params
+
+
+# ------------------------------------------------------------------ forward
+def _scan_blocks(cfg, stacked, h, positions, fn_builder):
+    """Run segmented scans over the stacked layer params."""
+    aux_total = jnp.zeros((), jnp.float32)
+    for start, end, window in layer_segments(cfg):
+        seg = tree_slice(stacked, start, end)
+        body = fn_builder(window)
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (h, aux_total), _ = jax.lax.scan(body, (h, aux_total), seg)
+    return h, aux_total
+
+
+def forward_hidden(
+    cfg: ModelConfig,
+    params: dict,
+    h: jax.Array,
+    positions: jax.Array,
+    cross_kv=None,
+    cross_pos=None,
+    causal: bool = True,
+    rope: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Decoder (or encoder when causal=False) stack over a full sequence."""
+
+    def builder(window):
+        def body(carry, lp):
+            hh, aux = carry
+            hh, a = block_apply_train(
+                cfg, lp, hh, positions, window,
+                cross_kv=cross_kv, cross_pos=cross_pos, causal=causal, rope=rope,
+            )
+            return (hh, aux + a), None
+
+        return body
+
+    stacked = params["layers"]
+    return _scan_blocks(cfg, stacked, h, positions, builder)
+
+
+def _encode(cfg: ModelConfig, params: dict, frames: jax.Array) -> jax.Array:
+    """Whisper-style encoder over precomputed (stub) frame embeddings."""
+    s = frames.shape[1]
+    pos_emb = jnp.asarray(
+        sinusoidal_positions(s, cfg.d_model), dtype=frames.dtype
+    )
+    h = frames + pos_emb[None]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    aux = jnp.zeros((), jnp.float32)
+
+    def body(carry, lp):
+        hh, a = carry
+        hh, _ = block_apply_train(cfg, lp, hh, positions, 0, causal=False)
+        return (hh, a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (h, _), _ = jax.lax.scan(body_fn, (h, aux), params["enc_layers"])
+    return apply_norm(cfg, params["enc_norm"], h)
+
+
+def _embed_inputs(cfg: ModelConfig, params: dict, batch: dict):
+    """Token (+ stub modality) embedding. Returns (h, positions)."""
+    compute_dtype = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    h = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+    if cfg.frontend == "vision_stub" and "patches" in batch:
+        patches = batch["patches"].astype(compute_dtype)  # (B, P, D) precomputed
+        h = jnp.concatenate([patches, h], axis=1)
+    positions = jnp.arange(h.shape[1], dtype=jnp.int32)
+    return h, positions
+
+
+def _logits(cfg: ModelConfig, params: dict, h: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(jnp.dtype(cfg.dtype))
+        return jnp.einsum("bsd,vd->bsv", h, w, preferred_element_type=jnp.float32)
+    w = params["lm_head"]["kernel"].astype(jnp.dtype(cfg.dtype))
+    return jnp.einsum("bsd,dv->bsv", h, w, preferred_element_type=jnp.float32)
+
+
+def train_loss(cfg: ModelConfig, params: dict, batch: dict):
+    """Cross-entropy (+ MoE aux) over the batch. Returns (loss, metrics).
+
+    batch: tokens (B,S) int32, targets (B,S) int32 with -1 = masked;
+           whisper additionally frames (B,T,D); vlm additionally patches.
+    """
+    if cfg.encoder_decoder:
+        enc_out = _encode(cfg, params, batch["frames"].astype(jnp.dtype(cfg.dtype)))
+        tokens = batch["tokens"]
+        t = tokens.shape[1]
+        h = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+        h = h + params["dec_pos"][:t].astype(h.dtype)[None]
+        positions = jnp.arange(t, dtype=jnp.int32)
+        cross_pos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+        h, aux = forward_hidden(
+            cfg, params, h, positions,
+            cross_kv=enc_out, cross_pos=cross_pos, rope=False,
+        )
+    else:
+        h, positions = _embed_inputs(cfg, params, batch)
+        h, aux = forward_hidden(cfg, params, h, positions)
+    h = apply_norm(cfg, params["final_norm"], h)
+    logits = _logits(cfg, params, h)  # (B, S, V) fp32
+
+    targets = batch["targets"]
+    if logits.shape[1] != targets.shape[1]:  # vlm: strip patch positions
+        logits = logits[:, logits.shape[1] - targets.shape[1] :]
+    mask = (targets >= 0).astype(jnp.float32)
+    safe_targets = jnp.maximum(targets, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.sum(
+        logits * jax.nn.one_hot(safe_targets, logits.shape[-1], dtype=logits.dtype),
+        axis=-1,
+    )
+    ce = (logz - gold) * mask
+    loss = jnp.sum(ce) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + aux
+    metrics = {"loss": loss, "aux_loss": aux, "tokens": jnp.sum(mask)}
+    return total, metrics
+
+
+# ------------------------------------------------------------------ serving
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    """All-layer stacked decode cache (bf16 KV, fp32 SSM state)."""
+    compute_dtype = jnp.dtype(cfg.dtype)
+    layers = cfg.n_layers
+    cache: dict = {}
+    if cfg.has_attention():
+        # enc-dec: the self-attention cache is bounded by the target length;
+        # cache_len sizes the cross-attention (encoder output) cache instead
+        self_len = min(cache_len, cfg.max_target_len) if cfg.encoder_decoder else cache_len
+        kv_shape = (layers, batch, self_len, cfg.n_kv_heads, cfg.d_head)
+        cache["k"] = jnp.zeros(kv_shape, compute_dtype)
+        cache["v"] = jnp.zeros(kv_shape, compute_dtype)
+    if cfg.has_ssm():
+        one = ssm_init_cache(cfg, batch, compute_dtype)
+        cache["ssm"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (layers,) + x.shape), one
+        )
+    if cfg.encoder_decoder:
+        cache["cross_k"] = jnp.zeros(
+            (layers, batch, cache_len, cfg.n_kv_heads, cfg.d_head), compute_dtype
+        )
+        cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+    return cache
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, cache_len: int):
+    """Process the prompt; returns (cache, last_token_logits)."""
+    rope = True
+    cross_kv = cross_pos = None
+    if cfg.encoder_decoder:
+        enc_out = _encode(cfg, params, batch["frames"].astype(jnp.dtype(cfg.dtype)))
+        tokens = batch["tokens"]
+        t = tokens.shape[1]
+        h = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+        h = h + params["dec_pos"][:t].astype(h.dtype)[None]
+        positions = jnp.arange(t, dtype=jnp.int32)
+        cross_kv = enc_out
+        cross_pos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+        rope = False
+    else:
+        h, positions = _embed_inputs(cfg, params, batch)
+
+    caches = []
+    stacked = params["layers"]
+    for start, end, window in layer_segments(cfg):
+        seg = tree_slice(stacked, start, end)
+
+        def body(hh, lp, _window=window):
+            hh, c = block_prefill(
+                cfg, lp, hh, positions, _window, cache_len,
+                cross_kv=cross_kv, cross_pos=cross_pos, rope=rope,
+            )
+            return hh, c
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        h, seg_cache = jax.lax.scan(body_fn, h, seg)
+        caches.append(seg_cache)
+    # concatenate per-segment stacked caches back into (L, ...) order
+    cache = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *caches)
+    h = apply_norm(cfg, params["final_norm"], h)
+    logits_last = _logits(cfg, params, h[:, -1:, :])
+    return cache, logits_last
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, token: jax.Array, pos):
+    """One token decode. token: (B,) int32; pos: scalar int32 position.
+
+    Returns (new_cache, logits (B, 1, V))."""
+    compute_dtype = jnp.dtype(cfg.dtype)
+    h = jnp.take(params["embed"], token[:, None], axis=0).astype(compute_dtype)
+    rope = True
+    if cfg.encoder_decoder:
+        h = h + jax.lax.dynamic_slice_in_dim(
+            params["dec_pos"], pos, 1, axis=0
+        ).astype(compute_dtype)[None]
+        rope = False
+
+    new_segs = []
+    stacked = params["layers"]
+    for start, end, window in layer_segments(cfg):
+        seg_params = tree_slice(stacked, start, end)
+        seg_cache = tree_slice(cache, start, end)
+
+        def body(hh, xs, _window=window):
+            lp, c = xs
+            hh, nc = block_decode(
+                cfg, lp, hh, c, pos, _window, rope=rope, defer_cache_write=True
+            )
+            return hh, nc
+
+        h, new_seg_cache = jax.lax.scan(body, h, (seg_params, seg_cache))
+        new_segs.append(new_seg_cache)
+    ys = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *new_segs)
+    # deferred cache write: ONE stacked update per cache tensor (the decode
+    # write traffic is O(L*B*Hkv*dh), not O(cache)); donated inputs alias.
+    new_cache = dict(cache)
+    if "k_new" in ys:
+        new_cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], ys["k_new"].astype(cache["k"].dtype), (0, 0, pos, 0, 0)
+        )
+        new_cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], ys["v_new"].astype(cache["v"].dtype), (0, 0, pos, 0, 0)
+        )
+    if "ssm" in ys:
+        new_cache["ssm"] = ys["ssm"]
+    h = apply_norm(cfg, params["final_norm"], h)
+    logits = _logits(cfg, params, h)
+    return new_cache, logits

@@ -1,0 +1,6 @@
+from .steps import (  # noqa: F401
+    TrainState,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)

@@ -1,0 +1,91 @@
+"""Step builders: the jit-able train / prefill / decode functions.
+
+``make_train_step`` supports microbatched gradient accumulation (scan over
+micro-slices) and optional bf16 gradient all-reduce compression (cast before
+the cross-replica mean — the DP all-reduce then moves half the bytes; params
+and optimizer state stay fp32).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_update
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, accum_steps: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        return M.train_loss(cfg, params, batch)
+
+    def compute_grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        return loss, metrics, grads
+
+    def train_step(state: TrainState, batch: dict):
+        params = state.params
+        if accum_steps > 1:
+            # microbatch over the leading batch dim: (B,) -> (A, B/A)
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps) + x.shape[1:]),
+                batch,
+            )
+
+            def acc_body(carry, mb):
+                g_acc, loss_acc = carry
+                loss, _, grads = compute_grads(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, grads)
+                return (g_acc, loss_acc + loss), None
+
+            zeros = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params
+            )
+            (grads, loss_sum), _ = jax.lax.scan(
+                acc_body, (zeros, jnp.zeros((), jnp.float32)), micro
+            )
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss_sum / accum_steps
+            metrics = {"loss": loss}
+        else:
+            loss, metrics, grads = compute_grads(params, batch)
+
+        if opt_cfg.grad_allreduce_dtype == "bfloat16":
+            # gradient compression: halve DP all-reduce bytes
+            grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, params, grads, state.opt
+        )
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["total_loss"] = loss
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int):
+    def prefill_step(params, batch):
+        return M.prefill(cfg, params, batch, cache_len)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, token, pos):
+        return M.decode_step(cfg, params, cache, token, pos)
+
+    return decode_step

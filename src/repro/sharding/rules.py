@@ -1,0 +1,185 @@
+"""PartitionSpec rule tables: parameters, optimizer state, inputs, caches.
+
+Conventions (GSPMD / pjit path — no shard_map, so non-divisible dimensions
+are legal and padded by XLA; the roofline notes where padding costs):
+
+* ``data`` (+ ``pod`` when present) — batch / token parallelism (DP).
+* ``model`` — tensor parallelism: attention heads & d_ff & vocab; expert
+  parallelism for MoE (expert dim); SSM inner channels.
+* KV caches: batch over DP; heads over ``model`` when divisible, otherwise
+  the cache *sequence* dim shards over ``model`` (ring-style decode reads).
+* long_500k (batch=1): DP axes are idle for activations; caches/states shard
+  over sequence/heads as available.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    out = 1
+    for a in dp_axes(mesh):
+        out *= mesh.shape[a]
+    return out
+
+
+def _model_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+# ------------------------------------------------------------------- params
+def _param_spec(cfg: ModelConfig, path: str, ndim: int) -> P:
+    """Spec for one (unstacked) parameter identified by its tree path."""
+    leaf = path.split("/")[-1]
+    parent = path.split("/")[-2] if "/" in path else ""
+
+    if path == "embed":
+        return P("model", None)  # vocab-sharded
+    if parent == "lm_head":
+        return P(None, "model")
+    if path in ("dec_pos",):
+        return P(None, None)
+    # attention projections
+    if parent in ("q", "k", "v"):
+        return P(None, "model") if leaf == "kernel" else P("model")
+    if parent == "o":
+        return P("model", None) if leaf == "kernel" else P(None)
+    # MLP
+    if parent in ("up", "gate"):
+        return P(None, "model") if leaf == "kernel" else P("model")
+    if parent == "down":
+        return P("model", None) if leaf == "kernel" else P(None)
+    # MoE expert-parallel tables (E, d, f) / router
+    if leaf == "router":
+        return P(None, None)
+    if leaf in ("up", "gate", "down") and ndim == 3:
+        return P("model", None, None)
+    # SSM mixer (per-stream projections: shard-aligned TP)
+    if parent in ("in_proj", "z_proj", "x_proj", "b_proj", "c_proj", "dt_proj"):
+        return P(None, "model") if leaf == "kernel" else P("model")
+    if parent == "out_proj":
+        return P("model", None) if leaf == "kernel" else P(None)
+    if leaf in ("conv", "conv_x", "conv_b", "conv_c"):
+        return P(None, "model")
+    if leaf in ("conv_bias", "conv_x_bias", "conv_b_bias", "conv_c_bias",
+                "a_log", "dt_bias", "d_skip", "norm_scale"):
+        return P("model")
+    # norms, qk-norm scales, branch norms, everything small: replicate
+    return P(*([None] * ndim))
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+    )
+
+
+def param_partition_specs(cfg: ModelConfig, mesh: Mesh, params_shape) -> dict:
+    """PartitionSpec pytree matching an (abstract) param tree.
+
+    Leaves under stacked layer collections get a leading None for the layer
+    dim.  MoE 3-D expert tables keep their own rule (detected by ndim).
+    """
+
+    def guard(spec: P, shape) -> P:
+        """Drop axis assignments whose mesh size does not divide the dim
+        (jit-boundary arrays must shard evenly; e.g. hymba's fused SSM
+        in_proj width 6482 is not divisible by 16 — replicated, noted in
+        EXPERIMENTS.md)."""
+        fixed = []
+        for dim, ax in zip(shape, tuple(spec) + (None,) * len(shape)):
+            if ax is None:
+                fixed.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape.get(a, 1)
+            fixed.append(ax if dim % size == 0 else None)
+        return P(*fixed)
+
+    def spec_for(path, leaf):
+        ps = _path_str(path)
+        stacked = ps.startswith(("layers/", "enc_layers/"))
+        rel = ps.split("/", 1)[1] if stacked else ps
+        ndim = len(leaf.shape) - (1 if stacked else 0)
+        spec = _param_spec(cfg, rel, ndim)
+        if stacked:
+            spec = P(None, *spec)
+        return guard(spec, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def opt_partition_specs(cfg: ModelConfig, mesh: Mesh, opt_shape) -> dict:
+    """Optimizer state: m/v mirror params; step is replicated."""
+    param_like = {
+        "m": param_partition_specs(cfg, mesh, opt_shape["m"]),
+        "v": param_partition_specs(cfg, mesh, opt_shape["v"]),
+        "step": P(),
+    }
+    return param_like
+
+
+# ------------------------------------------------------------------- inputs
+def batch_partition_specs(
+    cfg: ModelConfig, mesh: Mesh, batch_shape: dict
+) -> dict:
+    dp = dp_axes(mesh)
+
+    def spec_for(path, leaf):
+        b = leaf.shape[0]
+        batch_ax = dp if b % _dp_size(mesh) == 0 else ()
+        rest = [None] * (len(leaf.shape) - 1)
+        return P(batch_ax if batch_ax else None, *rest)
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_shape)
+
+
+# ------------------------------------------------------------------- caches
+def cache_partition_specs(
+    cfg: ModelConfig, mesh: Mesh, cache_shape: dict
+) -> dict:
+    dp = dp_axes(mesh)
+    msize = _model_size(mesh)
+
+    def spec_for(path, leaf):
+        ps = _path_str(path)
+        leafname = ps.split("/")[-1]
+        if leafname in ("k", "v", "cross_k", "cross_v"):
+            layers, b, t, hkv, dh = leaf.shape
+            batch_ax = dp if b % _dp_size(mesh) == 0 else None
+            if hkv % msize == 0:
+                return P(None, batch_ax, None, "model", None)
+            if batch_ax is None:
+                # long-context single sequence: shard seq over everything
+                return P(None, None, ("data", "model") if "data" in mesh.axis_names else "model", None, None)
+            return P(None, batch_ax, "model", None, None)  # ring over seq
+        if ps.endswith("ssm/state"):
+            layers, b, h, p_, n = leaf.shape
+            batch_ax = dp if b % _dp_size(mesh) == 0 else None
+            head_ax = "model" if h % msize == 0 else None
+            return P(None, batch_ax, head_ax, None, None)
+        if ps.endswith("ssm/conv"):
+            layers, b, k, c = leaf.shape
+            batch_ax = dp if b % _dp_size(mesh) == 0 else None
+            ch_ax = "model" if c % msize == 0 else None
+            return P(None, batch_ax, None, ch_ax)
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
+
+
+def to_named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,61 @@
+"""API surface, error handling, result bookkeeping."""
+import numpy as np
+import pytest
+
+import repro.core as c
+from repro.core.problem import BRAMSpec, Buffer, PackingProblem
+
+
+def test_unknown_algorithm_raises():
+    prob = c.get_problem("CNV-W1A1")
+    with pytest.raises(ValueError):
+        c.pack(prob, "quantum-annealing")
+
+
+def test_unknown_accelerator_raises():
+    with pytest.raises(KeyError):
+        c.get_problem("ResNet-9000")
+
+
+def test_empty_problem_rejected():
+    with pytest.raises(ValueError):
+        PackingProblem([])
+    with pytest.raises(ValueError):
+        PackingProblem([Buffer(1, 1, 0)], max_items=0)
+
+
+def test_invalid_solution_detected():
+    prob = c.get_problem("CNV-W1A1")
+    sol = prob.singleton_solution()
+    sol.bins[0].append(sol.bins[1][0])  # duplicate placement
+    with pytest.raises(ValueError):
+        sol.validate()
+    assert not sol.is_valid()
+
+
+def test_packing_result_bookkeeping():
+    prob = c.get_problem("CNV-W2A2")
+    r = c.pack(prob, "ffd")
+    assert r.baseline_cost == prob.baseline_cost()
+    assert r.delta_bram == pytest.approx(r.baseline_cost / r.cost)
+    assert "FFD".lower() in r.algorithm
+    assert "eff" in r.summary()
+
+
+def test_custom_bram_spec():
+    """A single-mode RAM (e.g. a 512x36 URAM-style primitive) works."""
+    spec = BRAMSpec(modes=((72, 4096),), capacity_bits=72 * 4096)
+    prob = PackingProblem(
+        [Buffer(72, 100, 0), Buffer(36, 4000, 1)], bram=spec
+    )
+    sol = prob.singleton_solution()
+    assert sol.cost() == 2
+    assert prob.lower_bound() >= 1
+
+
+def test_report_cli_runs(capsys):
+    from repro.launch import report
+
+    report.main([])
+    out = capsys.readouterr().out
+    assert "cells ok" in out

@@ -1,0 +1,50 @@
+"""Algorithm behaviour vs the paper's Table 3/4 results."""
+import pytest
+
+import repro.core as c
+
+
+@pytest.mark.parametrize("algo", ["nfd", "ffd", "next-fit", "ga-nfd", "sa-nfd", "ga-s", "sa-s"])
+def test_all_algorithms_valid_and_improve(algo):
+    prob = c.get_problem("CNV-W1A1")
+    hp = c.hyperparams("CNV-W1A1")
+    r = c.pack(prob, algo, seed=0, max_seconds=4, **hp)
+    r.solution.validate()
+    assert r.cost <= prob.baseline_cost()
+    assert prob.lower_bound() <= r.cost
+
+
+@pytest.mark.parametrize("name", ["CNV-W1A1", "CNV-W2A2", "Tincy-YOLO"])
+def test_ga_nfd_matches_paper_quality(name):
+    """GA-NFD should reach (or beat — our baseline mode choice is freer)
+    the paper's inter-layer packed BRAM count within 3%."""
+    prob = c.get_problem(name)
+    hp = c.hyperparams(name)
+    r = c.pack(prob, "ga-nfd", seed=0, max_seconds=15, **hp)
+    paper_inter = c.PAPER_TABLE4[name][4]
+    assert r.cost <= paper_inter * 1.03, f"{name}: {r.cost} vs paper {paper_inter}"
+
+
+def test_intra_layer_constraint_enforced():
+    prob = c.get_problem("CNV-W1A1")
+    r = c.pack(prob, "ga-nfd", seed=0, max_seconds=5, intra_layer=True)
+    r.solution.validate(intra_layer=True)
+    # paper: intra costs at most ~10% over inter
+    r_inter = c.pack(prob, "ga-nfd", seed=0, max_seconds=5)
+    assert r.cost >= r_inter.cost  # constraint can't help
+    assert r.cost <= r_inter.cost * 1.15
+
+
+def test_cardinality_respected_all_algorithms():
+    prob = c.get_problem("CNV-W2A2", max_items=2)
+    for algo in ("nfd", "ffd", "ga-nfd", "sa-nfd"):
+        r = c.pack(prob, algo, seed=1, max_seconds=2)
+        assert r.solution.max_items_per_bin() <= 2
+
+
+def test_convergence_trace_monotone():
+    prob = c.get_problem("Tincy-YOLO")
+    r = c.pack(prob, "sa-nfd", seed=0, max_seconds=3)
+    costs = [cost for _, cost in r.trace]
+    assert all(a >= b for a, b in zip(costs, costs[1:]))
+    assert r.time_to_within(0.01) <= r.wall_time_s

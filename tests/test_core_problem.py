@@ -1,0 +1,70 @@
+"""The BRAM model reproduces the paper's published numbers (Table 4)."""
+import numpy as np
+import pytest
+
+import repro.core as c
+
+# (accelerator, paper baseline BRAM, paper baseline efficiency %)
+PAPER_BASELINES = [
+    ("CNV-W1A1", 120, 69.3),
+    ("CNV-W2A2", 208, 79.9),
+    ("DoReFaNet", 4116, 78.8),
+    ("ReBNet", 2880, 64.1),
+    ("RN50-W1A2", 2064, 57.9),
+    ("RN101-W1A2", 4240, 52.4),
+    ("RN152-W1A2", 5904, 50.9),
+]
+
+
+@pytest.mark.parametrize("name,paper_bram,paper_eff", PAPER_BASELINES)
+def test_total_bits_match_paper_baseline_efficiency(name, paper_bram, paper_eff):
+    """bits / (paper_baseline_BRAM * 18Kib) must equal the paper's baseline
+    efficiency — validates our Table 1 transcription + Eq. 1 bit accounting."""
+    prob = c.get_problem(name)
+    eff = prob.total_bits / (paper_bram * c.BRAM18_CAPACITY_BITS) * 100
+    assert eff == pytest.approx(paper_eff, abs=0.75), (
+        f"{name}: computed {eff:.2f}% vs paper {paper_eff}%"
+    )
+
+
+def test_buffer_counts_match_table1():
+    expected = {
+        "CNV-W1A1": 43, "CNV-W2A2": 28, "Tincy-YOLO": 137,
+        "DoReFaNet": 320, "ReBNet": 552, "RN50-W1A2": 896,
+    }
+    for name, n in expected.items():
+        assert c.get_problem(name).n == n
+
+
+def test_bin_cost_brute_force():
+    prob = c.get_problem("CNV-W1A1")
+    rng = np.random.default_rng(1)
+    for _ in range(200):
+        w = int(rng.integers(1, 100))
+        h = int(rng.integers(1, 100_000))
+        expect = min(
+            -(-w // mw) * -(-h // md) for mw, md in c.BRAM18_MODES
+        )
+        assert prob.bin_cost(w, h) == expect
+
+
+def test_baseline_is_singleton_cost():
+    for name in ("CNV-W1A1", "ReBNet"):
+        prob = c.get_problem(name)
+        assert prob.singleton_solution().cost() == prob.baseline_cost()
+
+
+def test_lower_bound_below_everything():
+    for name in c.ACCELERATORS:
+        prob = c.get_problem(name)
+        assert prob.lower_bound() <= prob.baseline_cost()
+        paper_inter = c.PAPER_TABLE4[name][4]
+        assert prob.lower_bound() <= paper_inter
+
+
+def test_grid_gap_properties():
+    prob = c.get_problem("CNV-W1A1")
+    for w, h in [(32, 100), (1, 8192), (64, 513)]:
+        gap = prob.grid_gap(w, h)
+        mw, md = prob.bin_mode(w, h)
+        assert 0 <= gap < md

@@ -1,0 +1,93 @@
+"""Hypothesis property tests on the packing invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import repro.core as c
+from repro.core.nfd import nfd_from_scratch, nfd_repack
+from repro.core.ga import buffer_swap
+
+
+@st.composite
+def problems(draw):
+    n = draw(st.integers(2, 60))
+    widths = draw(st.lists(st.integers(1, 80), min_size=n, max_size=n))
+    depths = draw(st.lists(st.integers(1, 40_000), min_size=n, max_size=n))
+    layers = draw(st.lists(st.integers(0, 5), min_size=n, max_size=n))
+    max_items = draw(st.integers(1, 6))
+    bufs = [
+        c.Buffer(width=w, depth=d, layer=l)
+        for w, d, l in zip(widths, depths, layers)
+    ]
+    return c.PackingProblem(bufs, max_items=max_items)
+
+
+@settings(max_examples=40, deadline=None)
+@given(problems(), st.integers(0, 10_000))
+def test_nfd_from_scratch_valid(prob, seed):
+    rng = np.random.default_rng(seed)
+    sol = nfd_from_scratch(prob, rng, p_adm_h=0.2)
+    sol.validate()
+    assert prob.lower_bound() <= sol.cost()
+    eff = sol.efficiency()
+    assert 0.0 < eff <= 1.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(problems(), st.integers(0, 10_000))
+def test_nfd_repack_preserves_validity(prob, seed):
+    rng = np.random.default_rng(seed)
+    sol = prob.singleton_solution()
+    for _ in range(4):
+        sol = nfd_repack(sol, rng, threshold=0.9, extra_frac=0.1, p_adm_h=0.3)
+        sol.validate()
+
+
+@settings(max_examples=40, deadline=None)
+@given(problems(), st.integers(0, 10_000))
+def test_buffer_swap_preserves_validity(prob, seed):
+    rng = np.random.default_rng(seed)
+    sol = nfd_from_scratch(prob, rng)
+    for _ in range(4):
+        sol = buffer_swap(sol, rng, n_moves=3)
+        sol.validate()
+
+
+@settings(max_examples=30, deadline=None)
+@given(problems())
+def test_singleton_cost_additive(prob):
+    sol = prob.singleton_solution()
+    per = [prob.bin_cost(int(prob.widths[i]), int(prob.depths[i])) for i in range(prob.n)]
+    assert sol.cost() == sum(per)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.integers(1, 80), st.integers(1, 30_000), st.integers(1, 30_000)
+)
+def test_same_width_stack_subadditive_per_mode(w, h1, h2):
+    """Within any FIXED aspect mode, stacking same-width buffers never costs
+    more than separate bins (ceil subadditivity).  The *cross-mode* claim is
+    FALSE — hypothesis found w=37, h1=1, h2=2048, where the parts prefer
+    different modes and stacking loses a BRAM; that is precisely why NFD
+    admits a buffer only when the grid gap shrinks."""
+    from repro.core.problem import BRAM18_MODES
+
+    prob = c.PackingProblem([c.Buffer(w, h1, 0), c.Buffer(w, h2, 0)])
+    stacked_cost = prob.bin_cost(w, h1 + h2)
+    for mw, md in BRAM18_MODES:
+        per_mode = (-(-w // mw)) * (-(-h1 // md)) + (-(-w // mw)) * (-(-h2 // md))
+        assert stacked_cost <= per_mode
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(8, 512), min_size=1, max_size=60), st.integers(1, 8))
+def test_sequence_packing_invariants(doc_lengths, card):
+    from repro.data import pack_documents
+
+    seq_len = 512
+    seqs = pack_documents(doc_lengths, seq_len, max_docs_per_seq=card)
+    placed = sorted(i for s in seqs for i in s)
+    assert placed == list(range(len(doc_lengths)))
+    for s in seqs:
+        assert sum(doc_lengths[i] for i in s) <= seq_len
+        assert len(s) <= card

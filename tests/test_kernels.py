@@ -1,0 +1,66 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.problem import BRAM18_MODES
+from repro.kernels.binpack_fitness.kernel import binpack_fitness_pallas
+from repro.kernels.binpack_fitness.ops import population_costs
+from repro.kernels.binpack_fitness.ref import binpack_fitness_ref
+from repro.kernels.packed_gather.kernel import packed_gather_matvec
+from repro.kernels.packed_gather.ops import bank_matvec, split_outputs
+from repro.kernels.packed_gather.ref import packed_gather_ref
+
+
+@pytest.mark.parametrize("p,nb", [(1, 1), (4, 37), (50, 300), (8, 128), (75, 1000)])
+def test_binpack_fitness_matches_ref(p, nb, rng):
+    w = rng.integers(0, 80, (p, nb)).astype(np.int32)
+    w[rng.random((p, nb)) < 0.25] = 0
+    h = rng.integers(1, 70_000, (p, nb)).astype(np.int32)
+    a = binpack_fitness_pallas(jnp.asarray(w), jnp.asarray(h), BRAM18_MODES, True)
+    b = binpack_fitness_ref(jnp.asarray(w), jnp.asarray(h), BRAM18_MODES)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_binpack_fitness_against_core_solution(rng):
+    """Kernel totals must equal the core Solution.cost() bookkeeping."""
+    import repro.core as c
+
+    prob = c.get_problem("CNV-W2A2")
+    sol = c.nfd_from_scratch(prob, np.random.default_rng(0))
+    nb = len(sol.bins)
+    w = np.zeros((1, nb), np.int32)
+    h = np.zeros((1, nb), np.int32)
+    for i, b in enumerate(sol.bins):
+        bw, bh, _ = prob.bin_stats(b)
+        w[0, i], h[0, i] = bw, bh
+    total = population_costs(jnp.asarray(w), jnp.asarray(h))
+    assert int(total[0]) == sol.cost()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(1, 6).map(lambda k: 8 * k),
+    st.integers(1, 4).map(lambda k: 128 * k),
+    st.integers(1, 6),
+    st.integers(0, 2**31 - 1),
+)
+def test_packed_gather_property(r, c, n, seed):
+    rng = np.random.default_rng(seed)
+    bank = jnp.asarray(rng.normal(size=(r, c)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(n, c)), jnp.float32)
+    seg = jnp.asarray(rng.integers(0, n, r), jnp.int32)
+    a = packed_gather_matvec(bank, x, seg, interpret=True)
+    b = packed_gather_ref(bank, x, seg)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_packed_gather_split_outputs(rng):
+    r, c, n = 24, 128, 3
+    bank = jnp.asarray(rng.normal(size=(r, c)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(n, c)), jnp.float32)
+    seg = jnp.asarray(np.repeat(np.arange(n), r // n), jnp.int32)
+    y = bank_matvec(bank, x, seg, backend="ref")
+    parts = split_outputs(y, seg, n)
+    assert sum(p.shape[0] for p in parts) == r

@@ -1,0 +1,48 @@
+"""TPU tile-grid adaptation: planner + packed store invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.memory import PackedParameterStore, plan_packing, tile_efficiency
+from repro.memory.tiles import fold_2d, padded_bytes
+from repro.models import model as M
+
+
+def test_tile_padding_math():
+    assert padded_bytes((1, 100), 4) == 8 * 128 * 4
+    assert padded_bytes((8, 128), 4) == 8 * 128 * 4
+    assert padded_bytes((9, 129), 4) == 16 * 256 * 4
+    assert fold_2d((3, 4, 5)) == (12, 5)
+    assert tile_efficiency((8, 128), 4) == 1.0
+    assert tile_efficiency((1, 128), 4) == pytest.approx(1 / 8)
+
+
+@pytest.mark.parametrize("arch", ["hymba-1.5b", "qwen2-0.5b", "whisper-medium"])
+def test_store_roundtrip_exact(arch):
+    cfg = configs.get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    plans = plan_packing(params, max_seconds=1.0, split_stacked=True)
+    store = PackedParameterStore(params, plans)
+    rebuilt = store.unpack()
+    assert jax.tree.all(
+        jax.tree.map(lambda a, b: bool(jnp.array_equal(a, b)), params, rebuilt)
+    )
+
+
+def test_packing_never_increases_bytes():
+    cfg = configs.get_smoke_config("granite-moe-1b-a400m")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    for plan in plan_packing(params, max_seconds=1.0, split_stacked=True).values():
+        assert plan.padded_bytes_after <= plan.padded_bytes_before
+        assert 0 < plan.efficiency_before() <= plan.efficiency_after() <= 1.0
+
+
+def test_bank_cardinality():
+    cfg = configs.get_smoke_config("hymba-1.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    plans = plan_packing(params, max_items=3, max_seconds=1.0, split_stacked=True)
+    for plan in plans.values():
+        for bank in plan.banks:
+            assert len(bank) <= 3
