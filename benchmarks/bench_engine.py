@@ -1,0 +1,112 @@
+"""Evolution-engine benchmark: the incremental + batched hot path vs the
+seed's from-scratch scalar evaluation.
+
+Two tables:
+
+* ``engine_throughput`` — GA-NFD generations/sec per accelerator and
+  backend at an identical generation budget.  Backends are bit-identical
+  for a fixed seed, so the ``cost`` column doubles as a parity check
+  (``cost_match`` vs the legacy engine).  Generation rate is measured
+  between a short warm run and a long run, cancelling population-init and
+  JIT-compile time out of the quotient.
+* ``engine_convergence`` — equal-wall-clock quality: final BRAM cost and
+  time-to-within-1%-of-best for the legacy engine, the new engine, and the
+  island portfolio under the same budget.
+"""
+from __future__ import annotations
+
+import time
+
+import repro.core as c
+from repro.core.ga import GeneticPacker
+
+from .common import BUDGETS, emit
+
+THROUGHPUT_BACKENDS = ("legacy", "python", "ref")
+
+
+def _timed_pack(prob, hp, backend, seconds=None, gens=None, seed=0):
+    packer = GeneticPacker(
+        backend=backend,
+        seed=seed,
+        max_generations=gens if gens is not None else 10**9,
+        max_seconds=seconds if seconds is not None else 1e9,
+        patience=10**9,
+        p_adm_w=hp.get("p_adm_w", 0.0),
+        p_adm_h=hp.get("p_adm_h", 0.1),
+        n_pop=hp.get("n_pop", 50),
+        n_tour=hp.get("n_tour", 5),
+        p_mut=hp.get("p_mut", 0.4),
+    )
+    t0 = time.perf_counter()
+    result = packer.pack(prob)
+    return result, time.perf_counter() - t0
+
+
+def run(accelerators=None, gens=None, budgets=None, quick=False):
+    if accelerators is None:
+        accelerators = (
+            ["CNV-W1A1", "RN152-W1A2"]
+            if quick
+            else ["CNV-W1A1", "Tincy-YOLO", "DoReFaNet", "RN50-W1A2", "RN152-W1A2"]
+        )
+    t_warm, t_full = (0.4, 1.6) if quick else (1.0, 5.0)
+    g_parity = gens if gens is not None else (25 if quick else 110)
+    budgets = budgets or BUDGETS
+
+    # ---------------------------------------------------------- throughput
+    # Two timed runs per backend; the generation rate is taken between them,
+    # cancelling population-init and JIT-compile time out of the quotient.
+    # The parity columns come from a third run at a fixed generation count:
+    # all backends must land on the exact same cost for the same seed.
+    header = [
+        "accelerator", "backend", "gens_per_sec", "speedup_vs_legacy",
+        "cost", "cost_match",
+    ]
+    rows = []
+    for name in accelerators:
+        prob = c.get_problem(name)
+        hp = c.hyperparams(name)
+        legacy_gps = None
+        legacy_cost = None
+        for backend in THROUGHPUT_BACKENDS:
+            r_warm, dt_warm = _timed_pack(prob, hp, backend, seconds=t_warm)
+            r_full, dt_full = _timed_pack(prob, hp, backend, seconds=t_full)
+            gps = (r_full.iterations - r_warm.iterations) / max(
+                dt_full - dt_warm, 1e-9
+            )
+            parity, _ = _timed_pack(prob, hp, backend, gens=g_parity)
+            if backend == "legacy":
+                legacy_gps, legacy_cost = gps, parity.cost
+            rows.append(
+                [
+                    name,
+                    backend,
+                    round(gps, 1),
+                    round(gps / legacy_gps, 2),
+                    parity.cost,
+                    parity.cost == legacy_cost,
+                ]
+            )
+    emit("engine_throughput", header, rows)
+
+    # --------------------------------------------------------- convergence
+    header2 = ["accelerator", "engine", "cost", "t_to_1pct_s", "budget_s"]
+    rows2 = []
+    for name in accelerators:
+        prob = c.get_problem(name)
+        hp = c.hyperparams(name)
+        budget = max(2, budgets[name] // (4 if quick else 2))
+        for engine, backend in (("ga-nfd-legacy", "legacy"), ("ga-nfd", "auto")):
+            r = c.pack(prob, "ga-nfd", seed=0, max_seconds=budget, backend=backend, **hp)
+            r.solution.validate()
+            rows2.append([name, engine, r.cost, round(r.time_to_within(0.01), 2), budget])
+        r = c.pack_portfolio(
+            prob, n_islands=2 if quick else 4, seed=0, max_seconds=budget, **hp
+        )
+        r.solution.validate()
+        rows2.append(
+            [name, "portfolio", r.cost, round(r.time_to_within(0.01), 2), budget]
+        )
+    emit("engine_convergence", header2, rows2)
+    return rows, rows2

@@ -14,11 +14,12 @@ import time
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="table3|table4|fig45|tpu|seqpack|kernels|roofline")
+                    help="engine|table3|table4|fig45|tpu|seqpack|kernels|roofline")
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args(argv)
 
     from . import (
+        bench_engine,
         bench_fig45,
         bench_kernels,
         bench_roofline,
@@ -33,6 +34,7 @@ def main(argv=None) -> None:
     small = ["CNV-W1A1", "CNV-W2A2", "Tincy-YOLO", "RN50-W1A2"] if args.quick else None
 
     jobs = {
+        "engine": lambda: bench_engine.run(quick=args.quick),
         "table3": lambda: bench_table3.run(accelerators=small, budgets=budgets),
         "table4": lambda: bench_table4.run(accelerators=small, budgets=budgets),
         "fig45": lambda: bench_fig45.run(budget_s=8 if args.quick else 25),

@@ -15,9 +15,10 @@ from .accelerators import (  # noqa: F401
     get_problem,
     hyperparams,
 )
-from .api import ALGORITHMS, pack  # noqa: F401
+from .api import ALGORITHMS, make_packer, pack  # noqa: F401
 from .ga import GeneticPacker, buffer_swap  # noqa: F401
 from .nfd import nfd_from_scratch, nfd_pack_order, nfd_repack  # noqa: F401
+from .portfolio import IslandSpec, pack_portfolio  # noqa: F401
 from .problem import (  # noqa: F401
     BRAM18_CAPACITY_BITS,
     BRAM18_MODES,

@@ -10,25 +10,31 @@ from .ga import GeneticPacker
 from .problem import PackingProblem, PackingResult, Solution
 from .sa import SimulatedAnnealingPacker
 
-ALGORITHMS = ("ga-nfd", "ga-s", "sa-nfd", "sa-s", "nfd", "ffd", "next-fit", "baseline")
+ALGORITHMS = (
+    "ga-nfd",
+    "ga-s",
+    "sa-nfd",
+    "sa-s",
+    "portfolio",
+    "nfd",
+    "ffd",
+    "next-fit",
+    "baseline",
+)
 
 
-def pack(
-    prob: PackingProblem,
-    algorithm: str = "ga-nfd",
+def make_packer(
+    algorithm: str,
     seed: int = 0,
     max_seconds: float = 30.0,
     intra_layer: bool = False,
+    backend: str = "auto",
     **hyper,
-) -> PackingResult:
-    """Pack `prob` with the named algorithm and return a PackingResult.
-
-    Accepts the paper's Table 2 hyperparameter names: n_pop, n_tour, p_mut,
-    p_adm_w, p_adm_h, sa_t0, sa_rc.
-    """
+):
+    """Build a GA/SA packer from the paper's Table 2 hyperparameter names."""
     algorithm = algorithm.lower()
     if algorithm in ("ga-nfd", "ga-s"):
-        packer = GeneticPacker(
+        return GeneticPacker(
             mutation="nfd" if algorithm == "ga-nfd" else "swap",
             n_pop=hyper.get("n_pop", 50),
             n_tour=hyper.get("n_tour", 5),
@@ -43,10 +49,10 @@ def pack(
             max_seconds=max_seconds,
             patience=hyper.get("patience", 200),
             seed=seed,
+            backend=backend,
         )
-        return packer.pack(prob)
     if algorithm in ("sa-nfd", "sa-s"):
-        packer = SimulatedAnnealingPacker(
+        return SimulatedAnnealingPacker(
             perturbation="nfd" if algorithm == "sa-nfd" else "swap",
             t0=hyper.get("sa_t0", 30.0),
             rc=hyper.get("sa_rc", 1.0),
@@ -60,7 +66,49 @@ def pack(
             patience=hyper.get("patience", 20_000),
             seed=seed,
         )
+    raise ValueError(f"no evolutionary packer named {algorithm!r}")
+
+
+def pack(
+    prob: PackingProblem,
+    algorithm: str = "ga-nfd",
+    seed: int = 0,
+    max_seconds: float = 30.0,
+    intra_layer: bool = False,
+    backend: str = "auto",
+    **hyper,
+) -> PackingResult:
+    """Pack `prob` with the named algorithm and return a PackingResult.
+
+    Accepts the paper's Table 2 hyperparameter names: n_pop, n_tour, p_mut,
+    p_adm_w, p_adm_h, sa_t0, sa_rc.  ``backend`` selects the GA evaluation
+    engine: "auto" (Pallas kernel on TPU, batched jnp on CPU), "python"
+    (incremental scalar), "ref", "pallas", or "legacy" (the seed's
+    from-scratch scalar evaluation, kept for benchmarking) — all
+    bit-identical for a fixed seed.
+    """
+    algorithm = algorithm.lower()
+    if algorithm in ("ga-nfd", "ga-s", "sa-nfd", "sa-s"):
+        packer = make_packer(
+            algorithm,
+            seed=seed,
+            max_seconds=max_seconds,
+            intra_layer=intra_layer,
+            backend=backend,
+            **hyper,
+        )
         return packer.pack(prob)
+    if algorithm == "portfolio":
+        from .portfolio import pack_portfolio
+
+        return pack_portfolio(
+            prob,
+            seed=seed,
+            max_seconds=max_seconds,
+            intra_layer=intra_layer,
+            backend=backend,
+            **hyper,
+        )
 
     # deterministic one-shot heuristics
     t0 = time.perf_counter()

@@ -6,21 +6,45 @@ crossover — as in the paper, mutation (buffer swap for GA-S, NFD repack for
 GA-NFD) drives exploration, and tournament selection drives exploitation.
 Fitness is the multi-objective weighted sum of BRAM cost and mean distinct
 layers per bin (placement locality).
+
+Evaluation backends (`GeneticPacker(backend=...)`):
+
+* ``"python"`` — incremental scalar path: mutations carry per-bin record
+  caches (see `Solution`), so evaluating a mutated individual is O(touched
+  bins).
+* ``"ref"`` / ``"pallas"`` — batched path: the population's bin geometry
+  lives in padded ``(P, NB)`` int32 matrices updated in place from each
+  mutation's dirty bins, and the whole generation's costs are computed in one
+  `kernels.binpack_fitness.ops.population_costs` call (pure jnp on CPU,
+  Pallas kernel on TPU).
+* ``"auto"`` — ``pallas`` when a TPU is attached, else ``ref``.
+* ``"legacy"`` — the seed's from-scratch scalar evaluation (no caches), kept
+  as the benchmark baseline; identical RNG stream and results.
+
+All backends are bit-identical for a fixed seed: cost arithmetic is exact
+integer math and the RNG consumption order never depends on the backend.
 """
 from __future__ import annotations
 
 import time
+from typing import Sequence
 
 import numpy as np
 
 from .nfd import nfd_from_scratch, nfd_repack
 from .problem import PackingProblem, PackingResult, Solution
 
+BACKENDS = ("auto", "python", "ref", "pallas", "legacy")
+
 
 def buffer_swap(
     sol: Solution, rng: np.random.Generator, n_moves: int = 1, intra_layer: bool = False
 ) -> Solution:
-    """MPack-style perturbation: move random buffers between random bins."""
+    """MPack-style perturbation: move random buffers between random bins.
+
+    Reports every touched bin to the solution's record cache, so the child's
+    ``cost()`` re-evaluates at most ``2 * n_moves`` bins.
+    """
     out = sol.copy()
     prob = out.problem
     for _ in range(n_moves):
@@ -49,12 +73,14 @@ def buffer_swap(
         else:
             out.bins[src].remove(item)
             dst_bin.append(item)
-    out.bins = [b for b in out.bins if b]
+        out.touch(src, dst)
+    out.drop_empty()
     return out
 
 
-def fitness(sol: Solution, layer_weight: float) -> float:
-    f = float(sol.cost())
+def fitness(sol: Solution, layer_weight: float, cost: int | float | None = None) -> float:
+    """Weighted-sum fitness; pass a precomputed ``cost`` to avoid re-deriving it."""
+    f = float(sol.cost() if cost is None else cost)
     if layer_weight > 0.0:
         f += layer_weight * sol.distinct_layers_per_bin()
     return f
@@ -79,17 +105,34 @@ class GeneticPacker:
         max_generations: int = 100_000,
         patience: int = 200,
         seed: int = 0,
+        backend: str = "auto",
     ):
         if mutation not in ("nfd", "swap"):
             raise ValueError(f"unknown mutation {mutation!r}")
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; options: {BACKENDS}")
         self.__dict__.update(locals())
         del self.__dict__["self"]
+        # warm state for portfolio restarts (set after each pack())
+        self.last_population_: list[Solution] | None = None
 
     @property
     def name(self) -> str:
         return "GA-NFD" if self.mutation == "nfd" else "GA-S"
 
-    def _mutate(self, sol: Solution, rng: np.random.Generator) -> Solution:
+    def _resolve_backend(self) -> str:
+        if self.backend != "auto":
+            return self.backend
+        try:
+            import jax
+
+            return "pallas" if jax.default_backend() == "tpu" else "ref"
+        except Exception:
+            return "python"
+
+    def _mutate(
+        self, sol: Solution, rng: np.random.Generator, use_cache: bool = True
+    ) -> Solution:
         if self.mutation == "nfd":
             return nfd_repack(
                 sol,
@@ -100,15 +143,42 @@ class GeneticPacker:
                 intra_layer=self.intra_layer,
                 extra_frac=self.nfd_extra_frac,
                 max_bins=self.nfd_max_bins,
+                use_cache=use_cache,
             )
         return buffer_swap(
             sol, rng, n_moves=self.swap_moves, intra_layer=self.intra_layer
         )
 
-    def pack(self, prob: PackingProblem) -> PackingResult:
+    # ---------------------------------------------------------------- eval
+    @staticmethod
+    def _batched_costs(W: np.ndarray, H: np.ndarray, backend: str) -> np.ndarray:
+        import jax.numpy as jnp
+
+        from repro.kernels.binpack_fitness.ops import population_costs
+
+        interpret = backend == "pallas" and _default_jax_backend() != "tpu"
+        totals = population_costs(
+            jnp.asarray(W), jnp.asarray(H), backend=backend, interpret=interpret
+        )
+        return np.asarray(totals, dtype=np.float64)
+
+    def _fitness_legacy(self, sol: Solution, cost: float) -> float:
+        f = float(cost)
+        if self.layer_weight > 0.0:
+            f += self.layer_weight * sol.distinct_layers_per_bin_full()
+        return f
+
+    # ---------------------------------------------------------------- pack
+    def pack(
+        self, prob: PackingProblem, init_pop: Sequence[Solution] | None = None
+    ) -> PackingResult:
         rng = np.random.default_rng(self.seed)
         t0 = time.perf_counter()
-        pop = [
+        backend = self._resolve_backend()
+        batched = backend in ("ref", "pallas")
+        use_cache = backend != "legacy"
+        pop: list[Solution] = [s.copy() for s in (init_pop or [])][: self.n_pop]
+        pop += [
             nfd_from_scratch(
                 prob,
                 rng,
@@ -117,10 +187,31 @@ class GeneticPacker:
                 intra_layer=self.intra_layer,
                 sort_by_width=(k % 2 == 0),  # seed half the population width-aware
             )
-            for k in range(self.n_pop)
+            for k in range(len(pop), self.n_pop)
         ]
-        costs = np.asarray([s.cost() for s in pop], dtype=np.float64)
-        fits = np.asarray([fitness(s, self.layer_weight) for s in pop])
+        if batched:
+            # population geometry matrices: row i = per-bin (width, height) of
+            # pop[i], zero-padded to the worst case of one buffer per bin
+            W = np.zeros((self.n_pop, prob.n), dtype=np.int32)
+            H = np.zeros((self.n_pop, prob.n), dtype=np.int32)
+            for i, s in enumerate(pop):
+                s.fill_geometry(W[i], H[i])
+            costs = self._batched_costs(W, H, backend)
+            fits = np.asarray(
+                [fitness(s, self.layer_weight, cost=c) for s, c in zip(pop, costs)]
+            )
+        else:
+            W = H = None
+            if use_cache:
+                costs = np.asarray([s.cost() for s in pop], dtype=np.float64)
+                fits = np.asarray(
+                    [fitness(s, self.layer_weight, cost=c) for s, c in zip(pop, costs)]
+                )
+            else:
+                costs = np.asarray([s.cost_full() for s in pop], dtype=np.float64)
+                fits = np.asarray(
+                    [self._fitness_legacy(s, c) for s, c in zip(pop, costs)]
+                )
         best_i = int(np.argmin(costs))
         best = pop[best_i].copy()
         best_cost = int(costs[best_i])
@@ -135,15 +226,24 @@ class GeneticPacker:
             # --- mutation (mutated individuals are fresh objects; unmutated
             # ones may be shared references from selection, never mutated
             # in place)
+            mutated: list[int] = []
             for i in range(self.n_pop):
                 if rng.random() < self.p_mut:
-                    pop[i] = self._mutate(pop[i], rng)
-                    costs[i] = pop[i].cost()
-                    fits[i] = costs[i] + (
-                        self.layer_weight * pop[i].distinct_layers_per_bin()
-                        if self.layer_weight > 0
-                        else 0.0
-                    )
+                    pop[i] = self._mutate(pop[i], rng, use_cache=use_cache)
+                    if batched:
+                        pop[i].fill_geometry(W[i], H[i])
+                        mutated.append(i)
+                    elif use_cache:
+                        costs[i] = pop[i].cost()
+                        fits[i] = fitness(pop[i], self.layer_weight, cost=costs[i])
+                    else:
+                        costs[i] = pop[i].cost_full()
+                        fits[i] = self._fitness_legacy(pop[i], costs[i])
+            if batched and mutated:
+                totals = self._batched_costs(W, H, backend)
+                for i in mutated:
+                    costs[i] = totals[i]
+                    fits[i] = fitness(pop[i], self.layer_weight, cost=costs[i])
             # --- track best
             gi = int(np.argmin(costs))
             if int(costs[gi]) < best_cost:
@@ -160,8 +260,12 @@ class GeneticPacker:
             pop = [pop[int(w)] for w in winners]
             costs = costs[winners]
             fits = fits[winners]
+            if batched:
+                W = W[winners]
+                H = H[winners]
         wall = time.perf_counter() - t0
         trace.append((wall, best_cost))
+        self.last_population_ = pop
         return PackingResult(
             solution=best,
             cost=best_cost,
@@ -177,5 +281,15 @@ class GeneticPacker:
                 p_adm_w=self.p_adm_w,
                 p_adm_h=self.p_adm_h,
                 seed=self.seed,
+                backend=backend,
             ),
         )
+
+
+def _default_jax_backend() -> str:
+    try:
+        import jax
+
+        return jax.default_backend()
+    except Exception:  # pragma: no cover - jax is a hard dep in practice
+        return "cpu"

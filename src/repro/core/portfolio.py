@@ -1,0 +1,190 @@
+"""Multi-seed island portfolio: concurrent GA/SA runs with migration.
+
+The paper's hybrid mappers are stochastic — different seeds land on
+different local optima.  A *portfolio* run hedges that variance: K islands
+(differently-seeded GA/SA instances, possibly with different algorithms or
+hyperparameters) evolve concurrently on a thread pool under one shared
+wall-clock budget.  Every ``migration_every`` seconds the islands
+synchronize and the global best solution migrates into each island's warm
+state (replacing the worst GA individual / the SA incumbent if better), so
+good building blocks spread without collapsing diversity between barriers.
+
+The numpy/JAX work inside each island releases the GIL for the batched
+evaluation path; the pure-Python mutation loops time-slice.  Thread
+scheduling adds no nondeterminism of its own — migration happens at
+full-round barriers and each island's RNG stream depends only on its own
+seed and the round index — but rounds are wall-clock budgeted, so (as with
+any single time-budgeted GA/SA run) results still vary with machine speed
+and load.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Sequence
+
+from .ga import GeneticPacker
+from .problem import PackingProblem, PackingResult, Solution
+from .sa import SimulatedAnnealingPacker
+
+# offset between per-round reseeds; any large odd constant keeps island
+# streams disjoint from the user-visible base seeds
+_ROUND_SEED_STRIDE = 7919
+
+
+@dataclasses.dataclass(frozen=True)
+class IslandSpec:
+    """One island: which packer, which base seed, which overrides."""
+
+    algorithm: str = "ga-nfd"
+    seed: int = 0
+    hyper: dict = dataclasses.field(default_factory=dict)
+
+
+class _Island:
+    """A packer plus its warm state, advanced one budgeted round at a time."""
+
+    def __init__(self, prob: PackingProblem, spec: IslandSpec, packer):
+        self.prob = prob
+        self.spec = spec
+        self.packer = packer
+        self.is_ga = isinstance(packer, GeneticPacker)
+        self.pop: list[Solution] | None = None  # GA warm population
+        self.sol: Solution | None = None  # SA warm incumbent
+
+    def run_round(self, budget_s: float, round_idx: int) -> PackingResult:
+        self.packer.max_seconds = budget_s
+        self.packer.seed = self.spec.seed + _ROUND_SEED_STRIDE * round_idx
+        if self.is_ga:
+            result = self.packer.pack(self.prob, init_pop=self.pop)
+            self.pop = self.packer.last_population_
+        else:
+            result = self.packer.pack(self.prob, init=self.sol)
+            self.sol = self.packer.last_solution_
+        return result
+
+    def migrate_in(self, best: Solution, best_cost: int) -> None:
+        if self.is_ga:
+            if not self.pop:
+                return
+            worst = max(range(len(self.pop)), key=lambda i: self.pop[i].cost())
+            if self.pop[worst].cost() > best_cost:
+                self.pop[worst] = best.copy()
+        else:
+            if self.sol is not None and self.sol.cost() > best_cost:
+                self.sol = best.copy()
+
+
+def _merge_traces(rounds: list[tuple[float, list[PackingResult]]]) -> list:
+    """Global monotone best-so-far trace across islands and rounds."""
+    events: list[tuple[float, int]] = []
+    for offset, results in rounds:
+        for r in results:
+            events.extend((offset + t, c) for t, c in r.trace)
+    events.sort()
+    merged: list[tuple[float, int]] = []
+    best = None
+    for t, c in events:
+        if best is None or c < best:
+            best = c
+            merged.append((t, c))
+    return merged
+
+
+def pack_portfolio(
+    prob: PackingProblem,
+    islands: Sequence[IslandSpec] | None = None,
+    n_islands: int = 4,
+    algorithms: Sequence[str] = ("ga-nfd", "sa-nfd"),
+    seed: int = 0,
+    max_seconds: float = 30.0,
+    migration_every: float | None = None,
+    intra_layer: bool = False,
+    backend: str = "auto",
+    max_workers: int | None = None,
+    **hyper,
+) -> PackingResult:
+    """Run K differently-seeded islands concurrently; return the best result.
+
+    ``islands`` gives full control; otherwise ``n_islands`` specs are derived
+    by cycling ``algorithms`` with seeds ``seed, seed+1, ...``.  ``hyper``
+    accepts the same Table-2 names as :func:`repro.core.api.pack` and applies
+    to every island (per-island ``IslandSpec.hyper`` overrides win).
+    """
+    from .api import make_packer  # late import: api imports nothing from here
+
+    if islands is None:
+        if n_islands < 1:
+            raise ValueError("n_islands must be >= 1")
+        islands = [
+            IslandSpec(algorithm=algorithms[k % len(algorithms)], seed=seed + k)
+            for k in range(n_islands)
+        ]
+    if not islands:
+        raise ValueError("portfolio needs at least one island")
+    pool = [
+        _Island(
+            prob,
+            spec,
+            make_packer(
+                spec.algorithm,
+                seed=spec.seed,
+                max_seconds=max_seconds,
+                intra_layer=intra_layer,
+                backend=backend,
+                **{**hyper, **spec.hyper},
+            ),
+        )
+        for spec in islands
+    ]
+    interval = migration_every if migration_every is not None else max_seconds / 4.0
+    interval = max(interval, 1e-3)
+
+    t0 = time.perf_counter()
+    rounds: list[tuple[float, list[PackingResult]]] = []
+    best_sol: Solution | None = None
+    best_cost = 0
+    iterations = 0
+    round_idx = 0
+    with ThreadPoolExecutor(max_workers=max_workers or len(pool)) as ex:
+        while True:
+            elapsed = time.perf_counter() - t0
+            remaining = max_seconds - elapsed
+            if round_idx > 0 and remaining <= 1e-3:
+                break
+            budget = min(interval, max(remaining, 1e-3))
+            futures = [
+                ex.submit(isl.run_round, budget, round_idx) for isl in pool
+            ]
+            results = [f.result() for f in futures]
+            rounds.append((elapsed, results))
+            for r in results:
+                iterations += r.iterations
+                if best_sol is None or r.cost < best_cost:
+                    best_sol, best_cost = r.solution, r.cost
+            for isl in pool:
+                isl.migrate_in(best_sol, best_cost)
+            round_idx += 1
+    wall = time.perf_counter() - t0
+    trace = _merge_traces(rounds)
+    trace.append((wall, best_cost))
+    names = "+".join(isl.packer.name for isl in pool)
+    return PackingResult(
+        solution=best_sol,
+        cost=int(best_cost),
+        efficiency=best_sol.efficiency(),
+        wall_time_s=wall,
+        algorithm=f"portfolio[{names}]" + ("-intra" if intra_layer else ""),
+        trace=trace,
+        iterations=iterations,
+        params=dict(
+            islands=[
+                dict(algorithm=s.algorithm, seed=s.seed, **s.hyper) for s in islands
+            ],
+            rounds=round_idx,
+            migration_every=interval,
+            backend=backend,
+            seed=seed,
+        ),
+    )

@@ -178,34 +178,173 @@ class PackingProblem:
         return -(-self.total_bits // self.bram.capacity_bits)
 
 
+# geometry-matrix column indices (Solution._geom)
+_GW, _GH, _GCOST, _GBITS, _GNL = range(5)
+
+
 class Solution:
     """A packing: partition of buffer indices into bins.
 
     The representation is a list of bins, each a list of buffer indices.
-    Aggregate statistics are computed with numpy for speed; GA/SA call
-    ``cost()`` in their inner loop.
+
+    Per-bin aggregates live in a cached ``(nbins, 5)`` int64 *geometry
+    matrix* with columns ``(width, height, cost, bits, distinct_layers)`` and
+    a parallel dirty mask.  Mutation operators that touch only a few bins
+    (``buffer_swap``, ``nfd_repack``) preserve the rows of untouched bins and
+    mark the rest dirty via :meth:`touch` (or build the child solution with
+    :meth:`_with_geometry`), so ``cost()`` and friends cost O(touched bins)
+    of Python plus vectorized numpy over the rest — instead of the seed's
+    full O(n buffers) rescan per evaluation.  ``cost_full()`` recomputes
+    everything from scratch and is the reference the incremental path is
+    tested against.
+
+    Code that mutates ``bins`` directly must call :meth:`touch` with the
+    affected bin indices (or :meth:`invalidate` wholesale) — the aggregate
+    methods trust the cache.
     """
 
-    __slots__ = ("problem", "bins")
+    __slots__ = ("problem", "bins", "_geom", "_dirty", "_any_dirty", "_total_cost")
 
     def __init__(self, problem: PackingProblem, bins: Iterable[Iterable[int]]):
         self.problem = problem
-        self.bins = [list(b) for b in bins if len(list(b)) > 0]
+        materialized = [list(b) for b in bins]
+        self.bins = [b for b in materialized if b]
+        n = len(self.bins)
+        self._geom = np.empty((n, 5), dtype=np.int64)
+        self._dirty = np.ones(n, dtype=bool)
+        self._any_dirty = True
+        self._total_cost: int | None = None
+
+    @classmethod
+    def _with_geometry(
+        cls,
+        problem: PackingProblem,
+        bins: list[list[int]],
+        geom: np.ndarray,
+        dirty: np.ndarray,
+    ) -> "Solution":
+        """Internal fast constructor: ``bins`` are non-empty lists taken by
+        reference, ``geom``/``dirty`` aligned and owned by the new solution."""
+        self = object.__new__(cls)
+        self.problem = problem
+        self.bins = bins
+        self._geom = geom
+        self._dirty = dirty
+        self._any_dirty = bool(dirty.any())
+        self._total_cost = None
+        return self
 
     def copy(self) -> "Solution":
-        return Solution(self.problem, [list(b) for b in self.bins])
+        out = Solution._with_geometry(
+            self.problem,
+            [list(b) for b in self.bins],
+            self._geom.copy(),
+            self._dirty.copy(),
+        )
+        out._total_cost = self._total_cost
+        return out
+
+    # ----------------------------------------------------- geometry protocol
+    def _refresh(self) -> None:
+        """Recompute the geometry rows of dirty bins (O(touched buffers))."""
+        if not self._any_dirty:
+            return
+        p = self.problem
+        widths, depths = p.widths_py, p.depths_py
+        bits, layers = p.bits_py, p.layers_py
+        cmg = p._cost_mode_gap
+        g = self._geom
+        bins = self.bins
+        for bi in np.flatnonzero(self._dirty):
+            items = bins[bi]
+            w = 0
+            h = 0
+            nb = 0
+            for i in items:
+                wi = widths[i]
+                if wi > w:
+                    w = wi
+                h += depths[i]
+                nb += bits[i]
+            row = g[bi]
+            row[_GW] = w
+            row[_GH] = h
+            row[_GCOST] = cmg(w, h)[0]
+            row[_GBITS] = nb
+            row[_GNL] = len({layers[i] for i in items})
+        self._dirty[:] = False
+        self._any_dirty = False
+
+    def touch(self, *bin_indices: int) -> None:
+        """Mark bins dirty after their contents were mutated in place."""
+        for bi in bin_indices:
+            self._dirty[bi] = True
+        self._any_dirty = True
+        self._total_cost = None
+
+    def invalidate(self) -> None:
+        """Discard every cached row (after wholesale ``bins`` surgery)."""
+        n = len(self.bins)
+        if n != self._geom.shape[0]:
+            self._geom = np.empty((n, 5), dtype=np.int64)
+            self._dirty = np.ones(n, dtype=bool)
+        else:
+            self._dirty[:] = True
+        self._any_dirty = True
+        self._total_cost = None
+
+    def drop_empty(self) -> None:
+        """Remove empty bins (and their geometry rows) left behind by moves."""
+        if all(self.bins):
+            return
+        live = np.asarray([bool(b) for b in self.bins])
+        self.bins = [b for b in self.bins if b]
+        self._geom = self._geom[live]
+        self._dirty = self._dirty[live]
+        self._total_cost = None
+
+    def fill_geometry(self, wrow: np.ndarray, hrow: np.ndarray) -> int:
+        """Write per-bin (width, height) into int32 rows, zero-padding the
+        tail — the population-matrix update feeding the batched fitness
+        kernel.  Returns the number of live bins."""
+        self._refresh()
+        nb = len(self.bins)
+        wrow[:nb] = self._geom[:, _GW]
+        hrow[:nb] = self._geom[:, _GH]
+        wrow[nb:] = 0
+        hrow[nb:] = 0
+        return nb
 
     # ------------------------------------------------------------ aggregates
     def cost(self) -> int:
-        """Total BRAM count (the paper's primary objective)."""
+        """Total BRAM count (the paper's primary objective).
+
+        O(dirty bins) row refresh + a vectorized sum; the seed implementation
+        rescanned every buffer of every bin on each call."""
+        if self._total_cost is None:
+            self._refresh()
+            self._total_cost = int(self._geom[:, _GCOST].sum())
+        return self._total_cost
+
+    def cost_full(self) -> int:
+        """Seed-equivalent scalar evaluation: recompute every bin from its
+        buffers, bypassing (and not populating) the geometry cache.  Used for
+        cache-consistency tests and as the legacy benchmark baseline."""
         stats = self.problem.bin_stats
         return sum(stats(b)[2] for b in self.bins)
 
     def bin_costs(self) -> np.ndarray:
-        stats = self.problem.bin_stats
-        return np.asarray([stats(b)[2] for b in self.bins], dtype=np.int64)
+        self._refresh()
+        return self._geom[:, _GCOST].copy()
 
     def bin_efficiencies(self) -> np.ndarray:
+        self._refresh()
+        cap = self.problem.bram.capacity_bits
+        g = self._geom
+        return g[:, _GBITS] / (g[:, _GCOST] * float(cap))
+
+    def bin_efficiencies_full(self) -> np.ndarray:
+        """Seed-equivalent uncached scan (legacy benchmark baseline)."""
         p = self.problem
         bits_py = p.bits_py
         cap = p.bram.capacity_bits
@@ -220,6 +359,11 @@ class Solution:
         return self.problem.total_bits / (self.cost() * self.problem.bram.capacity_bits)
 
     def distinct_layers_per_bin(self) -> float:
+        self._refresh()
+        return float(self._geom[:, _GNL].sum()) / len(self.bins)
+
+    def distinct_layers_per_bin_full(self) -> float:
+        """Seed-equivalent uncached scan (legacy benchmark baseline)."""
         layers = self.problem.layers_py
         total = sum(len({layers[i] for i in b}) for b in self.bins)
         return total / len(self.bins)

@@ -40,6 +40,8 @@ class SimulatedAnnealingPacker:
             raise ValueError(f"unknown perturbation {perturbation!r}")
         self.__dict__.update(locals())
         del self.__dict__["self"]
+        # warm state for portfolio restarts (set after each pack())
+        self.last_solution_: Solution | None = None
 
     @property
     def name(self) -> str:
@@ -61,10 +63,11 @@ class SimulatedAnnealingPacker:
             sol, rng, n_moves=self.swap_moves, intra_layer=self.intra_layer
         )
 
-    def pack(self, prob: PackingProblem) -> PackingResult:
+    def pack(self, prob: PackingProblem, init: Solution | None = None) -> PackingResult:
+        """Anneal from scratch, or warm-start from ``init`` (island restarts)."""
         rng = np.random.default_rng(self.seed)
         t_start = time.perf_counter()
-        sol = nfd_from_scratch(
+        sol = init.copy() if init is not None else nfd_from_scratch(
             prob,
             rng,
             p_adm_w=self.p_adm_w,
@@ -94,6 +97,7 @@ class SimulatedAnnealingPacker:
             it += 1
         wall = time.perf_counter() - t_start
         trace.append((wall, best_cost))
+        self.last_solution_ = sol
         return PackingResult(
             solution=best,
             cost=int(best_cost),

@@ -1,6 +1,15 @@
-"""Jit'd wrapper: per-individual total BRAM cost for a padded population."""
+"""Jit'd wrapper: per-individual total BRAM cost for a padded population.
+
+This is the GA's generation-evaluation primitive: rows are individuals,
+columns are bins, entries are the bin geometry; empty (padded) slots carry
+``width == 0`` and cost nothing.  ``backend="auto"`` picks the Pallas kernel
+when a TPU is attached and the pure-jnp reference otherwise.
+"""
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 
 from repro.core.problem import BRAM18_MODES
@@ -9,12 +18,23 @@ from .kernel import binpack_fitness_pallas
 from .ref import binpack_fitness_ref
 
 
+@functools.partial(jax.jit, static_argnames=("modes",))
+def _ref_totals(widths, heights, modes):
+    return jnp.sum(binpack_fitness_ref(widths, heights, modes), axis=1)
+
+
 def population_costs(
     widths, heights, modes=BRAM18_MODES, backend: str = "pallas", interpret=True
 ):
     """(P, NB) geometry -> (P,) total cost per individual."""
+    if backend == "auto":
+        if jax.default_backend() == "tpu":
+            backend, interpret = "pallas", False
+        else:
+            backend = "ref"
     if backend == "pallas":
         per_bin = binpack_fitness_pallas(widths, heights, tuple(modes), interpret)
-    else:
-        per_bin = binpack_fitness_ref(widths, heights, tuple(modes))
-    return jnp.sum(per_bin, axis=1, dtype=jnp.int64)
+        return jnp.sum(per_bin, axis=1)
+    if backend != "ref":
+        raise ValueError(f"unknown backend {backend!r}; options: auto, pallas, ref")
+    return _ref_totals(widths, heights, tuple(modes))

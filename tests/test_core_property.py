@@ -1,5 +1,8 @@
 """Hypothesis property tests on the packing invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dependency: hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import repro.core as c

@@ -1,0 +1,248 @@
+"""Incremental delta-cost engine: cache consistency, backend parity,
+batched-kernel/scalar agreement, warm starts, and the island portfolio."""
+import numpy as np
+import pytest
+
+import repro.core as c
+from repro.core.ga import GeneticPacker, buffer_swap
+from repro.core.nfd import nfd_from_scratch, nfd_repack
+from repro.core.problem import Buffer, PackingProblem, Solution
+from repro.core.sa import SimulatedAnnealingPacker
+
+
+def random_problem(rng, n=None, max_items=None):
+    n = n or int(rng.integers(2, 60))
+    bufs = [
+        Buffer(
+            width=int(rng.integers(1, 80)),
+            depth=int(rng.integers(1, 40_000)),
+            layer=int(rng.integers(0, 6)),
+        )
+        for _ in range(n)
+    ]
+    return PackingProblem(bufs, max_items=max_items or int(rng.integers(1, 6)))
+
+
+# ------------------------------------------------------- Solution caching
+def test_solution_from_generator_of_generators():
+    """Regression: the seed consumed generator bins in the filter clause and
+    then materialized them as empty."""
+    prob = c.get_problem("CNV-W1A1")
+    ref = prob.singleton_solution()
+    sol = Solution(prob, (iter(b) for b in ref.bins))
+    assert sol.bins == ref.bins
+    assert sol.cost() == ref.cost()
+
+
+def test_empty_bins_filtered_but_contents_kept():
+    prob = random_problem(np.random.default_rng(0), n=6, max_items=6)
+    sol = Solution(prob, [[0, 1], [], [2, 3], [], [4, 5]])
+    assert sol.bins == [[0, 1], [2, 3], [4, 5]]
+    sol.validate()
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_incremental_cost_matches_full_after_mutations(seed):
+    """The incremental geometry cache must agree with a from-scratch rescan
+    after arbitrary chains of both mutation operators."""
+    rng = np.random.default_rng(seed)
+    prob = random_problem(rng)
+    sol = nfd_from_scratch(prob, rng, p_adm_h=0.2)
+    for step in range(12):
+        if step % 2 == 0:
+            sol = nfd_repack(sol, rng, threshold=0.9, extra_frac=0.1, p_adm_h=0.3)
+        else:
+            sol = buffer_swap(sol, rng, n_moves=3)
+        sol.validate()
+        assert sol.cost() == sol.cost_full()
+        np.testing.assert_array_equal(
+            sol.bin_efficiencies(), sol.bin_efficiencies_full()
+        )
+        assert sol.distinct_layers_per_bin() == pytest.approx(
+            sol.distinct_layers_per_bin_full()
+        )
+
+
+def test_touch_protocol_on_manual_edit():
+    prob = c.get_problem("CNV-W1A1")
+    sol = prob.singleton_solution()
+    assert sol.cost() == sol.cost_full()  # populate the cache first
+    item = sol.bins[1].pop()
+    sol.bins[0].append(item)
+    sol.touch(0, 1)
+    sol.drop_empty()
+    sol.validate()
+    assert sol.cost() == sol.cost_full()
+
+
+def test_copy_is_independent():
+    rng = np.random.default_rng(3)
+    prob = random_problem(rng, n=20, max_items=4)
+    a = nfd_from_scratch(prob, rng)
+    b = a.copy()
+    b = buffer_swap(b, rng, n_moves=4)
+    assert a.cost() == a.cost_full()
+    assert b.cost() == b.cost_full()
+
+
+# -------------------------------------------------- kernel/scalar parity
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("seed", range(6))
+def test_population_costs_matches_solution_cost(backend, seed):
+    """Batched population totals == per-individual Solution.cost(), on
+    randomized problems with empty-bin padding and non-lane-multiple bin
+    counts (the kernel pads NB internally to a lane multiple)."""
+    import jax.numpy as jnp
+
+    from repro.kernels.binpack_fitness.ops import population_costs
+
+    rng = np.random.default_rng(seed)
+    prob = random_problem(rng)
+    pop = [nfd_from_scratch(prob, rng, p_adm_h=0.3) for _ in range(5)]
+    nb_pad = prob.n + int(rng.integers(0, 9))  # deliberately not 128-aligned
+    W = np.zeros((len(pop), nb_pad), dtype=np.int32)
+    H = np.zeros((len(pop), nb_pad), dtype=np.int32)
+    for i, s in enumerate(pop):
+        s.fill_geometry(W[i], H[i])
+    totals = np.asarray(
+        population_costs(jnp.asarray(W), jnp.asarray(H), backend=backend)
+    )
+    for i, s in enumerate(pop):
+        assert int(totals[i]) == s.cost() == s.cost_full()
+
+
+def test_population_costs_auto_backend():
+    import jax.numpy as jnp
+
+    from repro.kernels.binpack_fitness.ops import population_costs
+
+    W = np.array([[36, 0, 7]], dtype=np.int32)
+    H = np.array([[1024, 0, 5000]], dtype=np.int32)
+    auto = population_costs(jnp.asarray(W), jnp.asarray(H), backend="auto")
+    ref = population_costs(jnp.asarray(W), jnp.asarray(H), backend="ref")
+    assert int(auto[0]) == int(ref[0])
+
+
+# ------------------------------------------------------- GA backend parity
+@pytest.mark.parametrize("name", ["CNV-W1A1", "CNV-W2A2"])
+def test_ga_backends_bit_identical(name):
+    """Fixed seed + fixed generations => identical best solution, identical
+    cost trace across every evaluation backend (the acceptance criterion)."""
+    prob = c.get_problem(name)
+    results = {}
+    for backend in ("legacy", "python", "ref", "pallas"):
+        packer = GeneticPacker(
+            backend=backend,
+            seed=7,
+            max_generations=25,
+            max_seconds=1e9,
+            patience=10**9,
+        )
+        results[backend] = packer.pack(prob)
+    ref = results["legacy"]
+    for backend, r in results.items():
+        assert r.cost == ref.cost, backend
+        assert [cc for _, cc in r.trace] == [cc for _, cc in ref.trace], backend
+        assert r.solution.bins == ref.solution.bins, backend
+        r.solution.validate()
+        assert r.solution.cost() == r.solution.cost_full() == r.cost
+
+
+def test_ga_swap_mutation_backends_identical():
+    prob = c.get_problem("CNV-W1A1")
+    results = [
+        GeneticPacker(
+            mutation="swap",
+            backend=backend,
+            seed=11,
+            max_generations=20,
+            max_seconds=1e9,
+            patience=10**9,
+        ).pack(prob)
+        for backend in ("legacy", "python", "ref")
+    ]
+    assert len({r.cost for r in results}) == 1
+    assert results[0].solution.bins == results[1].solution.bins
+
+
+def test_sa_incremental_consistency():
+    prob = c.get_problem("CNV-W2A2")
+    r = SimulatedAnnealingPacker(seed=2, max_seconds=1.5).pack(prob)
+    r.solution.validate()
+    assert r.solution.cost() == r.solution.cost_full() == r.cost
+
+
+# ------------------------------------------------------------ warm starts
+def test_ga_warm_start_from_population():
+    prob = c.get_problem("CNV-W1A1")
+    first = GeneticPacker(seed=0, max_generations=10, backend="python",
+                          max_seconds=1e9, patience=10**9)
+    r1 = first.pack(prob)
+    assert first.last_population_ is not None
+    second = GeneticPacker(seed=1, max_generations=10, backend="python",
+                           max_seconds=1e9, patience=10**9)
+    r2 = second.pack(prob, init_pop=first.last_population_)
+    r2.solution.validate()
+    assert r2.cost <= max(s.cost() for s in first.last_population_)
+
+
+def test_sa_warm_start_from_solution():
+    prob = c.get_problem("CNV-W1A1")
+    sa = SimulatedAnnealingPacker(seed=0, max_seconds=0.5)
+    r1 = sa.pack(prob)
+    assert sa.last_solution_ is not None
+    r2 = sa.pack(prob, init=r1.solution)
+    r2.solution.validate()
+    assert r2.cost <= r1.cost
+
+
+# -------------------------------------------------------------- portfolio
+def test_portfolio_basic():
+    prob = c.get_problem("CNV-W2A2")
+    r = c.pack_portfolio(
+        prob, n_islands=3, seed=0, max_seconds=2.0, backend="python"
+    )
+    r.solution.validate()
+    assert r.solution.cost() == r.solution.cost_full() == r.cost
+    assert r.cost <= prob.baseline_cost()
+    assert prob.lower_bound() <= r.cost
+    costs = [cc for _, cc in r.trace]
+    assert all(a >= b for a, b in zip(costs, costs[1:]))
+    assert r.params["rounds"] >= 1
+    assert len(r.params["islands"]) == 3
+    assert r.algorithm.startswith("portfolio[")
+
+
+def test_portfolio_via_pack_and_single_island():
+    prob = c.get_problem("CNV-W1A1")
+    r = c.pack(prob, "portfolio", seed=0, max_seconds=1.0, n_islands=1,
+               backend="python")
+    r.solution.validate()
+    assert r.cost <= prob.baseline_cost()
+
+
+def test_portfolio_explicit_island_specs():
+    prob = c.get_problem("CNV-W1A1")
+    islands = [
+        c.IslandSpec("ga-nfd", seed=0),
+        c.IslandSpec("sa-nfd", seed=5, hyper={"sa_t0": 10.0}),
+    ]
+    r = c.pack_portfolio(prob, islands=islands, max_seconds=1.0,
+                         backend="python")
+    r.solution.validate()
+    assert [i["algorithm"] for i in r.params["islands"]] == ["ga-nfd", "sa-nfd"]
+
+
+def test_portfolio_rejects_empty():
+    prob = c.get_problem("CNV-W1A1")
+    with pytest.raises(ValueError):
+        c.pack_portfolio(prob, n_islands=0)
+    with pytest.raises(ValueError):
+        c.pack_portfolio(prob, islands=[])
+
+
+def test_make_packer_rejects_heuristics():
+    with pytest.raises(ValueError):
+        c.make_packer("ffd")
+    with pytest.raises(ValueError):
+        GeneticPacker(backend="cuda")

@@ -2,7 +2,6 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.problem import BRAM18_MODES
 from repro.kernels.binpack_fitness.kernel import binpack_fitness_pallas
@@ -39,15 +38,13 @@ def test_binpack_fitness_against_core_solution(rng):
     assert int(total[0]) == sol.cost()
 
 
-@settings(max_examples=20, deadline=None)
-@given(
-    st.integers(1, 6).map(lambda k: 8 * k),
-    st.integers(1, 4).map(lambda k: 128 * k),
-    st.integers(1, 6),
-    st.integers(0, 2**31 - 1),
-)
-def test_packed_gather_property(r, c, n, seed):
+@pytest.mark.parametrize("seed", range(20))
+def test_packed_gather_property(seed):
+    # seeded random sweep (no hypothesis dependency for the tier-1 suite)
     rng = np.random.default_rng(seed)
+    r = 8 * int(rng.integers(1, 7))
+    c = 128 * int(rng.integers(1, 5))
+    n = int(rng.integers(1, 7))
     bank = jnp.asarray(rng.normal(size=(r, c)), jnp.float32)
     x = jnp.asarray(rng.normal(size=(n, c)), jnp.float32)
     seg = jnp.asarray(rng.integers(0, n, r), jnp.int32)
