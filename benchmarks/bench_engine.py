@@ -1,7 +1,7 @@
 """Evolution-engine benchmark: the incremental + batched hot path vs the
 seed's from-scratch scalar evaluation.
 
-Two tables:
+GA tables (``run``):
 
 * ``engine_throughput`` — GA-NFD generations/sec per accelerator and
   backend at an identical generation budget.  Backends are bit-identical
@@ -12,6 +12,16 @@ Two tables:
 * ``engine_convergence`` — equal-wall-clock quality: final BRAM cost and
   time-to-within-1%-of-best for the legacy engine, the new engine, and the
   island portfolio under the same budget.
+
+SA tables (``run_sa``):
+
+* ``sa_throughput`` — aggregate chain-iterations/sec of the vectorized
+  multi-chain SA-S engine per backend vs the scalar ``legacy`` loop, again
+  measured between two timed runs; the ``cost`` column shows the final
+  best cost at the identical wall-clock budget (the batched engine must be
+  equal-or-better while being >= 10x on RN152-W1A2).
+* ``sa_cost_vs_time`` — the best-cost-so-far trace of each long run, for
+  cost-vs-wall-time convergence plots.
 """
 from __future__ import annotations
 
@@ -19,6 +29,7 @@ import time
 
 import repro.core as c
 from repro.core.ga import GeneticPacker
+from repro.core.sa import SimulatedAnnealingPacker
 
 from .common import BUDGETS, emit
 
@@ -110,3 +121,76 @@ def run(accelerators=None, gens=None, budgets=None, quick=False):
         )
     emit("engine_convergence", header2, rows2)
     return rows, rows2
+
+
+# --------------------------------------------------------------------- SA
+def _timed_sa(prob, backend, n_chains, seconds, seed=0):
+    packer = SimulatedAnnealingPacker(
+        perturbation="swap",
+        backend=backend,
+        n_chains=n_chains,
+        seed=seed,
+        max_seconds=seconds,
+        max_iterations=10**9,
+        patience=10**9,
+    )
+    t0 = time.perf_counter()
+    result = packer.pack(prob)
+    return result, time.perf_counter() - t0
+
+
+def run_sa(accelerators=None, quick=False, n_chains=32):
+    """SA-S engine: aggregate chain-iterations/sec + cost-vs-time traces.
+
+    Rates are taken between a short warm run and a long run (cancelling
+    chain-init and jit/interpret warmup); ``legacy`` is the scalar loop
+    with its single chain, the batched backends run ``n_chains`` chains.
+    """
+    if accelerators is None:
+        accelerators = (
+            ["CNV-W1A1", "RN152-W1A2"]
+            if quick
+            else ["CNV-W1A1", "Tincy-YOLO", "RN50-W1A2", "RN152-W1A2"]
+        )
+    t_warm, t_full = (0.5, 2.0) if quick else (1.0, 5.0)
+    header = [
+        "accelerator", "backend", "n_chains", "chain_iters_per_sec",
+        "speedup_vs_legacy", "cost",
+    ]
+    rows = []
+    curve_rows = []
+    for name in accelerators:
+        prob = c.get_problem(name)
+        legacy_ips = None
+        for backend in THROUGHPUT_BACKENDS:
+            chains = 1 if backend == "legacy" else n_chains
+            r_warm, dt_warm = _timed_sa(prob, backend, chains, t_warm)
+            r_full, dt_full = _timed_sa(prob, backend, chains, t_full)
+            ips = (r_full.iterations - r_warm.iterations) / max(
+                dt_full - dt_warm, 1e-9
+            )
+            r_full.solution.validate()
+            if backend == "legacy":
+                legacy_ips = ips
+            rows.append(
+                [
+                    name,
+                    backend,
+                    chains,
+                    round(ips),
+                    round(ips / legacy_ips, 2),
+                    r_full.cost,
+                ]
+            )
+            curve_rows.extend(
+                [name, backend, round(t, 4), cost] for t, cost in r_full.trace
+            )
+            # the trace holds improvements only; close every curve at the
+            # shared wall-clock budget so backends plot to the same endpoint
+            curve_rows.append(
+                [name, backend, round(r_full.wall_time_s, 4), r_full.cost]
+            )
+    emit("sa_throughput", header, rows)
+    emit("sa_cost_vs_time", ["accelerator", "backend", "t_s", "best_cost"],
+         curve_rows)
+    return rows, curve_rows

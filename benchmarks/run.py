@@ -14,7 +14,7 @@ import time
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="engine|table3|table4|fig45|tpu|seqpack|kernels|roofline")
+                    help="engine|sa|table3|table4|fig45|tpu|seqpack|kernels|roofline")
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args(argv)
 
@@ -35,6 +35,7 @@ def main(argv=None) -> None:
 
     jobs = {
         "engine": lambda: bench_engine.run(quick=args.quick),
+        "sa": lambda: bench_engine.run_sa(quick=args.quick),
         "table3": lambda: bench_table3.run(accelerators=small, budgets=budgets),
         "table4": lambda: bench_table4.run(accelerators=small, budgets=budgets),
         "fig45": lambda: bench_fig45.run(budget_s=8 if args.quick else 25),

@@ -61,10 +61,16 @@ def make_packer(
             nfd_threshold=hyper.get("nfd_threshold", 0.95),
             nfd_extra_frac=hyper.get("nfd_extra_frac", 0.01),
             nfd_max_bins=hyper.get("nfd_max_bins", 8),
+            swap_moves=hyper.get("swap_moves", 2),
             intra_layer=intra_layer,
             max_seconds=max_seconds,
             patience=hyper.get("patience", 20_000),
             seed=seed,
+            n_chains=hyper.get("n_chains", 1),
+            backend=backend,
+            exchange_every=hyper.get("exchange_every", 256),
+            ladder_min=hyper.get("ladder_min", 0.25),
+            ladder_max=hyper.get("ladder_max", 4.0),
         )
     raise ValueError(f"no evolutionary packer named {algorithm!r}")
 
@@ -81,11 +87,13 @@ def pack(
     """Pack `prob` with the named algorithm and return a PackingResult.
 
     Accepts the paper's Table 2 hyperparameter names: n_pop, n_tour, p_mut,
-    p_adm_w, p_adm_h, sa_t0, sa_rc.  ``backend`` selects the GA evaluation
-    engine: "auto" (Pallas kernel on TPU, batched jnp on CPU), "python"
-    (incremental scalar), "ref", "pallas", or "legacy" (the seed's
-    from-scratch scalar evaluation, kept for benchmarking) — all
-    bit-identical for a fixed seed.
+    p_adm_w, p_adm_h, sa_t0, sa_rc.  ``backend`` selects the evaluation
+    engine — "auto", "python", "ref", "pallas", or "legacy" (the seed's
+    scalar loop, kept for benchmarking) — all bit-identical for a fixed
+    seed.  For the GA the backends batch generation fitness; for "sa-s"
+    they select the multi-chain annealer (pass ``n_chains=K`` to run K
+    temperature-laddered chains through the fused delta-cost kernel;
+    "sa-nfd" always runs the scalar loop).
     """
     algorithm = algorithm.lower()
     if algorithm in ("ga-nfd", "ga-s", "sa-nfd", "sa-s"):

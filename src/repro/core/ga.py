@@ -37,6 +37,99 @@ from .problem import PackingProblem, PackingResult, Solution
 BACKENDS = ("auto", "python", "ref", "pallas", "legacy")
 
 
+def _apply_one_swap_move(
+    bins: list[list[int]],
+    prob: PackingProblem,
+    src: int,
+    dst: int,
+    item_pick: int,
+    swap_pick,
+    intra_layer: bool,
+    undo: list | None,
+    touched: set | None,
+) -> None:
+    """Apply one already-drawn buffer-swap move to ``bins`` in place.
+
+    ``item_pick`` indexes into the source bin; ``swap_pick`` is a callable
+    returning the displaced-item index when the destination is full (so the
+    draw only happens when the legacy RNG stream would make it).  Inverse
+    ops are appended to ``undo``; touched bin indices are added to
+    ``touched``.  The caller owns the geometry-cache bookkeeping.
+    """
+    layers = prob.layers_py
+    src_bin = bins[src]
+    item = src_bin[item_pick]
+    dst_bin = bins[dst]
+    if intra_layer and dst_bin and layers[dst_bin[0]] != layers[item]:
+        return
+    if len(dst_bin) >= prob.max_items:
+        # swap instead of move to preserve cardinality feasibility
+        j = swap_pick(len(dst_bin))
+        other = dst_bin[j]
+        if intra_layer and layers[other] != (
+            layers[src_bin[0]] if src_bin else layers[item]
+        ):
+            return
+        dst_bin[j] = item
+        k = src_bin.index(item)
+        src_bin[k] = other
+        if undo is not None:
+            undo.append((src, k, item, dst, j, other))
+    else:
+        k = src_bin.index(item)
+        del src_bin[k]
+        dst_bin.append(item)
+        if undo is not None:
+            undo.append((src, k, item, dst, -1, -1))
+    if touched is not None:
+        touched.add(src)
+        touched.add(dst)
+
+
+def apply_swap_moves(
+    sol: Solution,
+    rng: np.random.Generator,
+    n_moves: int = 1,
+    intra_layer: bool = False,
+    undo: list | None = None,
+    touched: set | None = None,
+) -> None:
+    """Apply an MPack buffer-swap move sequence to ``sol.bins`` IN PLACE.
+
+    Consumes ``rng`` in exactly the order the historical ``buffer_swap``
+    did (the engine backend-parity tests pin trajectories on this stream).
+    The geometry cache is NOT updated: callers either commit with
+    ``sol.touch(*touched)`` + ``sol.drop_empty()`` or roll back with
+    :func:`undo_swap_moves`.
+    """
+    bins = sol.bins
+    prob = sol.problem
+    for _ in range(n_moves):
+        if len(bins) < 2:
+            break
+        src = int(rng.integers(len(bins)))
+        dst = int(rng.integers(len(bins)))
+        if src == dst or not bins[src]:
+            continue
+        item_pick = int(rng.integers(len(bins[src])))
+        _apply_one_swap_move(
+            bins, prob, src, dst, item_pick,
+            lambda n: int(rng.integers(n)), intra_layer, undo, touched,
+        )
+
+
+def undo_swap_moves(sol: Solution, undo: list) -> None:
+    """Reverse a recorded move sequence, restoring exact bin contents/order."""
+    bins = sol.bins
+    for src, k, item, dst, j, other in reversed(undo):
+        if j < 0:
+            bins[dst].pop()
+            bins[src].insert(k, item)
+        else:
+            bins[dst][j] = other
+            bins[src][k] = item
+
+
 def buffer_swap(
     sol: Solution, rng: np.random.Generator, n_moves: int = 1, intra_layer: bool = False
 ) -> Solution:
@@ -46,34 +139,11 @@ def buffer_swap(
     ``cost()`` re-evaluates at most ``2 * n_moves`` bins.
     """
     out = sol.copy()
-    prob = out.problem
-    for _ in range(n_moves):
-        if len(out.bins) < 2:
-            break
-        src = int(rng.integers(len(out.bins)))
-        dst = int(rng.integers(len(out.bins)))
-        if src == dst or not out.bins[src]:
-            continue
-        item = out.bins[src][int(rng.integers(len(out.bins[src])))]
-        dst_bin = out.bins[dst]
-        if intra_layer and dst_bin and int(prob.layers[dst_bin[0]]) != int(
-            prob.layers[item]
-        ):
-            continue
-        if len(dst_bin) >= prob.max_items:
-            # swap instead of move to preserve cardinality feasibility
-            j = int(rng.integers(len(dst_bin)))
-            other = dst_bin[j]
-            if intra_layer and int(prob.layers[other]) != int(
-                prob.layers[out.bins[src][0]] if out.bins[src] else prob.layers[item]
-            ):
-                continue
-            dst_bin[j] = item
-            out.bins[src][out.bins[src].index(item)] = other
-        else:
-            out.bins[src].remove(item)
-            dst_bin.append(item)
-        out.touch(src, dst)
+    touched: set[int] = set()
+    apply_swap_moves(out, rng, n_moves=n_moves, intra_layer=intra_layer,
+                     touched=touched)
+    if touched:
+        out.touch(*touched)
     out.drop_empty()
     return out
 

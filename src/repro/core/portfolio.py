@@ -51,7 +51,7 @@ class _Island:
         self.packer = packer
         self.is_ga = isinstance(packer, GeneticPacker)
         self.pop: list[Solution] | None = None  # GA warm population
-        self.sol: Solution | None = None  # SA warm incumbent
+        self.chains: list[Solution] | None = None  # SA warm incumbents (1/chain)
 
     def run_round(self, budget_s: float, round_idx: int) -> PackingResult:
         self.packer.max_seconds = budget_s
@@ -60,20 +60,18 @@ class _Island:
             result = self.packer.pack(self.prob, init_pop=self.pop)
             self.pop = self.packer.last_population_
         else:
-            result = self.packer.pack(self.prob, init=self.sol)
-            self.sol = self.packer.last_solution_
+            result = self.packer.pack(self.prob, init=self.chains)
+            self.chains = self.packer.last_chains_
         return result
 
     def migrate_in(self, best: Solution, best_cost: int) -> None:
-        if self.is_ga:
-            if not self.pop:
-                return
-            worst = max(range(len(self.pop)), key=lambda i: self.pop[i].cost())
-            if self.pop[worst].cost() > best_cost:
-                self.pop[worst] = best.copy()
-        else:
-            if self.sol is not None and self.sol.cost() > best_cost:
-                self.sol = best.copy()
+        """The global best replaces this island's worst warm individual/chain."""
+        warm = self.pop if self.is_ga else self.chains
+        if not warm:
+            return
+        worst = max(range(len(warm)), key=lambda i: warm[i].cost())
+        if warm[worst].cost() > best_cost:
+            warm[worst] = best.copy()
 
 
 def _merge_traces(rounds: list[tuple[float, list[PackingResult]]]) -> list:
@@ -96,13 +94,14 @@ def pack_portfolio(
     prob: PackingProblem,
     islands: Sequence[IslandSpec] | None = None,
     n_islands: int = 4,
-    algorithms: Sequence[str] = ("ga-nfd", "sa-nfd"),
+    algorithms: Sequence[str] = ("ga-nfd", "sa-s", "sa-nfd"),
     seed: int = 0,
     max_seconds: float = 30.0,
     migration_every: float | None = None,
     intra_layer: bool = False,
     backend: str = "auto",
     max_workers: int | None = None,
+    sa_chains: int = 8,
     **hyper,
 ) -> PackingResult:
     """Run K differently-seeded islands concurrently; return the best result.
@@ -111,6 +110,12 @@ def pack_portfolio(
     by cycling ``algorithms`` with seeds ``seed, seed+1, ...``.  ``hyper``
     accepts the same Table-2 names as :func:`repro.core.api.pack` and applies
     to every island (per-island ``IslandSpec.hyper`` overrides win).
+
+    A "sa-s" island runs the batched multi-chain annealer with ``sa_chains``
+    temperature-laddered chains sharing one fused delta-cost evaluation —
+    one such island replaces what used to take K scalar SA islands (and
+    their K thread slots); its chains warm-restart and receive migrants
+    like any other island's population.
     """
     from .api import make_packer  # late import: api imports nothing from here
 
@@ -133,7 +138,11 @@ def pack_portfolio(
                 max_seconds=max_seconds,
                 intra_layer=intra_layer,
                 backend=backend,
-                **{**hyper, **spec.hyper},
+                **{
+                    **({"n_chains": sa_chains} if spec.algorithm == "sa-s" else {}),
+                    **hyper,
+                    **spec.hyper,
+                },
             ),
         )
         for spec in islands

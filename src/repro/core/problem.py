@@ -315,6 +315,34 @@ class Solution:
         hrow[nb:] = 0
         return nb
 
+    def scan_bin_geometry(
+        self, bin_indices: Sequence[int]
+    ) -> tuple[list[int], list[int]]:
+        """Fresh (widths, heights) of the given bins from their *current*
+        contents, bypassing (and not populating) the geometry cache.
+
+        This is the "new geometry" probe of the in-place SA move protocol:
+        after a move sequence mutated ``bins`` without ``touch()``, the
+        cached rows still describe the pre-move state while this scan
+        describes the candidate — the pair feeds the delta-cost kernel.
+        An emptied bin reports (0, 0), which costs nothing.
+        """
+        widths, depths = self.problem.widths_py, self.problem.depths_py
+        ws: list[int] = []
+        hs: list[int] = []
+        bins = self.bins
+        for bi in bin_indices:
+            w = 0
+            h = 0
+            for i in bins[bi]:
+                wi = widths[i]
+                if wi > w:
+                    w = wi
+                h += depths[i]
+            ws.append(w)
+            hs.append(h)
+        return ws, hs
+
     # ------------------------------------------------------------ aggregates
     def cost(self) -> int:
         """Total BRAM count (the paper's primary objective).
@@ -392,6 +420,67 @@ class Solution:
             return True
         except ValueError:
             return False
+
+
+def encode_chain_items(
+    solutions: Sequence["Solution"], max_items: int, n_slots: int | None = None
+) -> tuple[np.ndarray, np.ndarray]:
+    """Encode C solutions as padded (C, n_slots, max_items) item matrices.
+
+    Slot (c, b) holds the buffer indices of chain c's bin b, ``-1``-padded;
+    a parallel (C, n_slots) count matrix gives each bin's fill.  This is the
+    fully-vectorized chain representation of the multi-chain annealer:
+    buffer-swap moves become fancy-indexed row edits, applied to every chain
+    at once.  Bin order and within-bin slot order are preserved, so
+    ``decode_chain_items`` round-trips exactly.
+    """
+    c = len(solutions)
+    nb = max(len(s.bins) for s in solutions)
+    if n_slots is not None:
+        nb = max(nb, n_slots)
+    items = np.full((c, nb, max_items), -1, dtype=np.int32)
+    counts = np.zeros((c, nb), dtype=np.int32)
+    for k, s in enumerate(solutions):
+        for b, binlist in enumerate(s.bins):
+            items[k, b, : len(binlist)] = binlist
+            counts[k, b] = len(binlist)
+    return items, counts
+
+
+def decode_chain_items(
+    prob: PackingProblem, items_row: np.ndarray, counts_row: np.ndarray
+) -> "Solution":
+    """Decode one chain row (n_slots, max_items) back into a `Solution`.
+
+    Empty slots are dropped; the result's geometry cache starts cold and is
+    recomputed from the buffers, so a decoded solution independently
+    re-derives the cost the incremental chain bookkeeping arrived at (the
+    engine's consistency tests rely on this property).
+    """
+    bins = [
+        [int(x) for x in items_row[b, : int(counts_row[b])]]
+        for b in range(len(counts_row))
+        if counts_row[b] > 0
+    ]
+    return Solution(prob, bins)
+
+
+def encode_chain_geometry(
+    solutions: Sequence["Solution"], n_slots: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Encode C solutions as padded (C, n_slots) int32 chain matrices.
+
+    Row c holds the per-bin (width, height) of ``solutions[c]``, zero-padded
+    — the multi-chain SA analogue of the GA's population matrices.  Returns
+    (W, H, live-bin counts).
+    """
+    c = len(solutions)
+    w = np.zeros((c, n_slots), dtype=np.int32)
+    h = np.zeros((c, n_slots), dtype=np.int32)
+    nb = np.zeros(c, dtype=np.int64)
+    for i, s in enumerate(solutions):
+        nb[i] = s.fill_geometry(w[i], h[i])
+    return w, h, nb
 
 
 @dataclasses.dataclass

@@ -1,21 +1,68 @@
-"""Simulated-annealing memory packer — Algorithm 3 of the paper.
+"""Simulated-annealing memory packer — Algorithm 3 of the paper, scaled out.
 
 SA-S reproduces Vasiljevic & Chow's MPack approach (buffer-swap
 perturbation); SA-NFD replaces the perturbation with the paper's Next-Fit
 Dynamic repack.  Temperature follows a Lundy-Mees schedule
 ``T = T0 / (1 + Rc * iter)`` parameterized by the paper's Table 2 (T0, Rc);
 acceptance of uphill moves is Metropolis: ``P_A = exp(-dE / T)``.
+
+Three engines share this class:
+
+* The **scalar loop** (``backend="legacy"``, and always for the NFD
+  perturbation, whose repack is inherently sequential Python): one chain,
+  one full ``Solution`` copy per proposed move — the seed implementation,
+  kept verbatim as the benchmark baseline.
+* The **single-chain delta engine** (``n_chains=1``, swap perturbation,
+  backends ``auto/python/ref/pallas``): moves are applied to the incumbent
+  *in place* with an undo log instead of copying, and only the touched
+  bins' before/after geometry goes through the fused
+  ``kernels.binpack_sa_step`` delta-cost kernel.  This engine consumes its
+  ``np.random.Generator`` in exactly the scalar loop's order (per-move
+  scalar draws; the Metropolis uniform drawn only for uphill moves) and
+  compares against float64 ``math.exp`` — so every backend, including
+  ``legacy``, produces the same trajectory for the same seed (pinned in
+  ``tests/test_engine.py``).  Delta costs are exact integers in every
+  backend, so the kernel choice can never fork a trajectory.
+* The **vectorized multi-chain engine** (``n_chains=C > 1``): chain state
+  is encoded once into padded ``(C, NB, max_items)`` item matrices plus
+  ``(C, NB)`` geometry matrices (the codecs in ``core.problem``), and the
+  whole step — move generation from one ``(n_moves, 4, C)`` uniform block,
+  move application, delta-cost evaluation, Metropolis acceptance, and
+  rollback of rejected chains — runs as numpy array programs over all
+  chains at once, with zero per-chain Python in the loop.  Chains form a
+  *temperature ladder* (chain 0 at the paper's T0, the rest log-spaced over
+  ``[T0*ladder_min, T0*ladder_max]``); every ``exchange_every`` steps the
+  worst chain adopts the global best state (best-chain exchange, the cheap
+  cousin of parallel-tempering configuration swaps) and emptied bins are
+  compacted out of the live slot window.  Within-bin slot order differs
+  from the scalar loop's list order (array removal swaps with the last
+  slot), so multi-chain runs define their own — still backend-identical —
+  trajectories.
 """
 from __future__ import annotations
 
 import math
 import time
+from typing import Sequence
 
 import numpy as np
 
-from .ga import buffer_swap
+from .ga import (
+    BACKENDS,
+    _default_jax_backend,
+    apply_swap_moves,
+    buffer_swap,
+    undo_swap_moves,
+)
 from .nfd import nfd_from_scratch, nfd_repack
-from .problem import PackingProblem, PackingResult, Solution
+from .problem import (
+    PackingProblem,
+    PackingResult,
+    Solution,
+    decode_chain_items,
+    encode_chain_geometry,
+    encode_chain_items,
+)
 
 
 class SimulatedAnnealingPacker:
@@ -35,17 +82,39 @@ class SimulatedAnnealingPacker:
         max_iterations: int = 2_000_000,
         patience: int = 20_000,
         seed: int = 0,
+        n_chains: int = 1,
+        backend: str = "auto",
+        exchange_every: int = 256,
+        ladder_min: float = 0.25,
+        ladder_max: float = 4.0,
     ):
         if perturbation not in ("nfd", "swap"):
             raise ValueError(f"unknown perturbation {perturbation!r}")
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; options: {BACKENDS}")
+        if n_chains < 1:
+            raise ValueError("n_chains must be >= 1")
         self.__dict__.update(locals())
         del self.__dict__["self"]
         # warm state for portfolio restarts (set after each pack())
         self.last_solution_: Solution | None = None
+        self.last_chains_: list[Solution] | None = None
 
     @property
     def name(self) -> str:
-        return "SA-NFD" if self.perturbation == "nfd" else "SA-S"
+        base = "SA-NFD" if self.perturbation == "nfd" else "SA-S"
+        if self.perturbation == "swap" and self.n_chains > 1:
+            base += f"x{self.n_chains}"
+        return base
+
+    def _resolve_backend(self) -> str:
+        if self.backend != "auto":
+            return self.backend
+        # unlike the GA (auto -> ref on CPU), SA steps are tiny (C x 2 x
+        # swap_moves entries): host numpy beats per-step device dispatch
+        from repro.kernels.binpack_sa_step.ops import resolve_auto
+
+        return resolve_auto()[0]
 
     def _perturb(self, sol: Solution, rng: np.random.Generator) -> Solution:
         if self.perturbation == "nfd":
@@ -63,8 +132,30 @@ class SimulatedAnnealingPacker:
             sol, rng, n_moves=self.swap_moves, intra_layer=self.intra_layer
         )
 
-    def pack(self, prob: PackingProblem, init: Solution | None = None) -> PackingResult:
-        """Anneal from scratch, or warm-start from ``init`` (island restarts)."""
+    def pack(
+        self,
+        prob: PackingProblem,
+        init: Solution | Sequence[Solution] | None = None,
+    ) -> PackingResult:
+        """Anneal from scratch, or warm-start from ``init`` (island restarts).
+
+        ``init`` may be a single solution or a per-chain list (extra chains
+        start from fresh NFD packings).  The NFD perturbation always runs
+        the scalar loop (its repack is sequential Python); for the swap
+        perturbation the backend selects the engine, ``legacy`` being the
+        scalar loop.
+        """
+        if self.perturbation == "nfd" or self._resolve_backend() == "legacy":
+            return self._pack_scalar(prob, init)
+        if self.n_chains == 1:
+            return self._pack_single_chain(prob, init, self._resolve_backend())
+        return self._pack_multi_chain(prob, init, self._resolve_backend())
+
+    # ------------------------------------------------------------ scalar loop
+    def _pack_scalar(self, prob: PackingProblem, init) -> PackingResult:
+        """The seed's serial annealer (one chain, one Solution copy per move)."""
+        if init is not None and not isinstance(init, Solution):
+            init = init[0] if len(init) else None
         rng = np.random.default_rng(self.seed)
         t_start = time.perf_counter()
         sol = init.copy() if init is not None else nfd_from_scratch(
@@ -95,22 +186,362 @@ class SimulatedAnnealingPacker:
             else:
                 stale += 1
             it += 1
+        # the trace holds the monotone improvement curve only; the run's end
+        # lives in wall_time_s (the seed appended a duplicate terminal tuple)
         wall = time.perf_counter() - t_start
-        trace.append((wall, best_cost))
         self.last_solution_ = sol
-        return PackingResult(
-            solution=best,
-            cost=int(best_cost),
-            efficiency=best.efficiency(),
-            wall_time_s=wall,
-            algorithm=self.name + ("-intra" if self.intra_layer else ""),
-            trace=trace,
-            iterations=it,
-            params=dict(
-                t0=self.t0,
-                rc=self.rc,
+        self.last_chains_ = [sol]
+        return self._result(
+            best, int(best_cost), wall, trace, it, "legacy", uphill=None
+        )
+
+    # ----------------------------------------------- single-chain delta engine
+    def _pack_single_chain(self, prob: PackingProblem, init, backend):
+        """One chain, in-place moves + undo, fused delta-cost evaluation.
+
+        Bit-identical to the scalar loop for the same seed: same RNG stream
+        (scalar per-move draws, Metropolis uniform only on uphill moves),
+        same float64 ``math.exp`` compare, exact integer deltas.
+        """
+        from repro.kernels.binpack_sa_step.ops import sa_step_deltas
+
+        interpret = backend == "pallas" and _default_jax_backend() != "tpu"
+        rng = np.random.default_rng(self.seed)
+        t_start = time.perf_counter()
+        if init is not None and not isinstance(init, Solution):
+            init = init[0] if len(init) else None
+        sol = init.copy() if init is not None else nfd_from_scratch(
+            prob,
+            rng,
+            p_adm_w=self.p_adm_w,
+            p_adm_h=self.p_adm_h,
+            intra_layer=self.intra_layer,
+        )
+        cost = int(sol.cost())
+        chain_w = np.zeros((1, prob.n), dtype=np.int32)
+        chain_h = np.zeros_like(chain_w)
+        sol.fill_geometry(chain_w[0], chain_h[0])
+        best, best_cost = sol.copy(), cost
+        trace = [(time.perf_counter() - t_start, best_cost)]
+        width = 2 * max(self.swap_moves, 1)
+        old_w = np.zeros((1, width), dtype=np.int32)
+        old_h = np.zeros_like(old_w)
+        new_w = np.zeros_like(old_w)
+        new_h = np.zeros_like(old_w)
+        undo: list = []
+        uphill_prop = 0
+        uphill_acc = 0
+        it = 0
+        stale = 0
+        while it < self.max_iterations and stale < self.patience:
+            if (it & 0xFF) == 0 and time.perf_counter() - t_start > self.max_seconds:
+                break
+            temp = self.t0 / (1.0 + self.rc * it)
+            # --- propose in place (legacy RNG stream)
+            undo.clear()
+            tset: set[int] = set()
+            apply_swap_moves(
+                sol, rng, n_moves=self.swap_moves,
+                intra_layer=self.intra_layer, undo=undo, touched=tset,
+            )
+            tl = sorted(tset)
+            k = len(tl)
+            old_w[0] = 0
+            old_h[0] = 0
+            new_w[0] = 0
+            new_h[0] = 0
+            if k:
+                old_w[0, :k] = chain_w[0, tl]
+                old_h[0, :k] = chain_h[0, tl]
+                ws, hs = sol.scan_bin_geometry(tl)
+                new_w[0, :k] = ws
+                new_h[0, :k] = hs
+            d_e = int(
+                sa_step_deltas(
+                    old_w, old_h, new_w, new_h, backend=backend, interpret=interpret
+                )[0]
+            )
+            # --- Metropolis: the uniform is drawn only for uphill moves
+            if d_e > 0:
+                uphill_prop += 1
+            if d_e < 0 or (temp > 0 and rng.random() < math.exp(-d_e / temp)):
+                if d_e > 0:
+                    uphill_acc += 1
+                cost += d_e
+                if tl:
+                    sol.touch(*tl)
+                    bins = sol.bins
+                    if any(not bins[b] for b in tl):
+                        sol.drop_empty()
+                        sol.fill_geometry(chain_w[0], chain_h[0])
+                    else:
+                        chain_w[0, tl] = new_w[0, :k]
+                        chain_h[0, tl] = new_h[0, :k]
+            else:
+                undo_swap_moves(sol, undo)
+            if cost < best_cost:
+                best, best_cost = sol.copy(), cost
+                trace.append((time.perf_counter() - t_start, best_cost))
+                stale = 0
+            else:
+                stale += 1
+            it += 1
+        wall = time.perf_counter() - t_start
+        self.last_solution_ = sol
+        self.last_chains_ = [sol]
+        return self._result(
+            best, best_cost, wall, trace, it, backend,
+            uphill=(uphill_prop, uphill_acc),
+        )
+
+    # -------------------------------------------- vectorized multi-chain engine
+    def _chain_t0s(self) -> np.ndarray:
+        """Lundy-Mees T0 ladder: chain 0 at the configured T0 (single-chain
+        parity), the rest log-spaced over [T0*ladder_min, T0*ladder_max]
+        (a lone extra chain sits at the range's geometric mean)."""
+        t0s = np.full(self.n_chains, float(self.t0))
+        if self.n_chains == 2:
+            t0s[1] = self.t0 * math.sqrt(self.ladder_min * self.ladder_max)
+        elif self.n_chains > 2:
+            t0s[1:] = self.t0 * np.geomspace(
+                self.ladder_min, self.ladder_max, self.n_chains - 1
+            )
+        return t0s
+
+    def _pack_multi_chain(self, prob: PackingProblem, init, backend):
+        """C temperature-laddered chains advanced in lock-step, all-numpy."""
+        from repro.kernels.binpack_sa_step.ops import metropolis_mask, sa_step_deltas
+
+        n_chains = self.n_chains
+        cap = prob.max_items
+        n = prob.n
+        n_moves = max(self.swap_moves, 1)
+        width = 2 * n_moves
+        interpret = backend == "pallas" and _default_jax_backend() != "tpu"
+        t_start = time.perf_counter()
+        master = np.random.default_rng(self.seed)
+
+        # --- chain init: warm starts first, fresh NFD packings for the rest
+        if init is None:
+            inits: list[Solution] = []
+        elif isinstance(init, Solution):
+            inits = [init]
+        else:
+            inits = [s for s in init if s is not None][:n_chains]
+        sols = [s.copy() for s in inits]
+        sols += [
+            nfd_from_scratch(
+                prob,
+                master,
                 p_adm_w=self.p_adm_w,
                 p_adm_h=self.p_adm_h,
-                seed=self.seed,
-            ),
+                intra_layer=self.intra_layer,
+                sort_by_width=(c % 2 == 1),
+            )
+            for c in range(len(sols), n_chains)
+        ]
+        items, counts = encode_chain_items(sols, cap)
+        bw, bh, live = encode_chain_geometry(sols, items.shape[1])
+        costs = np.asarray([s.cost() for s in sols], dtype=np.int64)
+
+        # buffer lookup tables with a zero/empty sentinel at index n
+        widths_ext = np.append(prob.widths, 0)
+        depths_ext = np.append(prob.depths, 0)
+        layers_ext = np.append(prob.layers, -1)
+
+        best_costs = costs.copy()  # per-chain best (drives per-chain patience)
+        gi = int(np.argmin(costs))
+        gbest_cost = int(costs[gi])
+        g_items = items[gi].copy()
+        g_counts = counts[gi].copy()
+        g_live = int(live[gi])
+        trace = [(time.perf_counter() - t_start, gbest_cost)]
+        t0s = self._chain_t0s()
+        ci = np.arange(n_chains)
+        stale = np.zeros(n_chains, dtype=np.int64)
+        steps = np.zeros(n_chains, dtype=np.int64)
+        tslots = np.zeros((n_chains, width), dtype=np.int64)
+        entry_ok = np.zeros((n_chains, width), dtype=bool)
+        uphill_prop = 0
+        uphill_acc = 0
+        it = 0
+        while it < self.max_iterations:
+            if (it & 0xFF) == 0 and time.perf_counter() - t_start > self.max_seconds:
+                break
+            active = stale < self.patience
+            if not active.any():
+                break
+            # --- propose: one uniform block drives every chain's move sequence
+            u_all = master.random((n_moves, 4, n_chains))
+            snaps = []
+            for m in range(n_moves):
+                u = u_all[m]
+                src = np.minimum((u[0] * live).astype(np.int64), live - 1)
+                dst = np.minimum((u[1] * live).astype(np.int64), live - 1)
+                ok = active & (live >= 2) & (src != dst)
+                cnt_s = counts[ci, src]
+                ok &= cnt_s > 0
+                item_k = np.minimum(
+                    (u[2] * cnt_s).astype(np.int64), np.maximum(cnt_s - 1, 0)
+                )
+                item = items[ci, src, item_k]  # masked below where ~ok
+                cnt_d = counts[ci, dst]
+                item_safe = np.where(item >= 0, item, n)
+                if self.intra_layer:
+                    dst_first = items[ci, dst, 0]
+                    ok &= (cnt_d == 0) | (
+                        layers_ext[np.where(dst_first >= 0, dst_first, n)]
+                        == layers_ext[item_safe]
+                    )
+                full = cnt_d >= cap
+                j = np.minimum(
+                    (u[3] * cnt_d).astype(np.int64), np.maximum(cnt_d - 1, 0)
+                )
+                other = items[ci, dst, j]
+                swap = ok & full
+                if self.intra_layer:
+                    src_first = items[ci, src, 0]
+                    swap &= (
+                        layers_ext[np.where(other >= 0, other, n)]
+                        == layers_ext[np.where(src_first >= 0, src_first, n)]
+                    )
+                move = ok & ~full
+                applied = move | swap
+                # full-row snapshots make rollback a pure scatter
+                snaps.append(
+                    (src, dst, applied,
+                     items[ci, src], items[ci, dst], cnt_s, cnt_d)
+                )
+                idx = np.flatnonzero(swap)
+                if idx.size:
+                    items[idx, dst[idx], j[idx]] = item[idx]
+                    items[idx, src[idx], item_k[idx]] = other[idx]
+                idx = np.flatnonzero(move)
+                if idx.size:
+                    # remove: swap the picked slot with the last, shrink
+                    items[idx, src[idx], item_k[idx]] = items[
+                        idx, src[idx], cnt_s[idx] - 1
+                    ]
+                    items[idx, src[idx], cnt_s[idx] - 1] = -1
+                    counts[idx, src[idx]] -= 1
+                    # append
+                    items[idx, dst[idx], cnt_d[idx]] = item[idx]
+                    counts[idx, dst[idx]] += 1
+                tslots[:, 2 * m] = src
+                tslots[:, 2 * m + 1] = dst
+                entry_ok[:, 2 * m] = applied
+                entry_ok[:, 2 * m + 1] = applied
+            # a bin touched twice contributes one delta term (first entry wins)
+            for a in range(1, width):
+                for b in range(a):
+                    entry_ok[:, a] &= ~(
+                        entry_ok[:, b] & (tslots[:, a] == tslots[:, b])
+                    )
+            # --- fused delta-cost step over every chain at once
+            sel = np.where(entry_ok, tslots, 0)
+            rows = ci[:, None]
+            old_w = np.where(entry_ok, bw[rows, sel], 0).astype(np.int32)
+            old_h = np.where(entry_ok, bh[rows, sel], 0).astype(np.int32)
+            slot_items = items[rows, sel, :]  # (C, width, cap)
+            ids = np.where(slot_items >= 0, slot_items, n)
+            new_w = np.where(entry_ok, widths_ext[ids].max(-1), 0).astype(np.int32)
+            new_h = np.where(entry_ok, depths_ext[ids].sum(-1), 0).astype(np.int32)
+            d_e = sa_step_deltas(
+                old_w, old_h, new_w, new_h, backend=backend, interpret=interpret
+            )
+            # --- Metropolis acceptance, batched
+            temps = t0s / (1.0 + self.rc * it)
+            accept = metropolis_mask(d_e, temps, master.random(n_chains)) & active
+            # --- roll back rejected chains (reverse move order)
+            reject = ~accept
+            for m in range(n_moves - 1, -1, -1):
+                src, dst, applied, s_items, d_items, s_cnt, d_cnt = snaps[m]
+                idx = np.flatnonzero(reject & applied)
+                if idx.size:
+                    items[idx, dst[idx]] = d_items[idx]
+                    counts[idx, dst[idx]] = d_cnt[idx]
+                    items[idx, src[idx]] = s_items[idx]
+                    counts[idx, src[idx]] = s_cnt[idx]
+            # --- commit accepted chains
+            costs += np.where(accept, d_e, 0)
+            com = entry_ok & accept[:, None]
+            flat = np.flatnonzero(com.ravel())
+            if flat.size:
+                rr = flat // width
+                cc = tslots.ravel()[flat]
+                bw[rr, cc] = new_w.ravel()[flat]
+                bh[rr, cc] = new_h.ravel()[flat]
+            uphill = active & (d_e > 0)
+            uphill_prop += int(np.count_nonzero(uphill))
+            uphill_acc += int(np.count_nonzero(uphill & accept))
+            # --- per-chain best / patience bookkeeping
+            steps += active
+            improved = active & (costs < best_costs)
+            best_costs = np.where(improved, costs, best_costs)
+            stale = np.where(improved, 0, np.where(active, stale + 1, stale))
+            bi = int(np.argmin(costs))
+            if costs[bi] < gbest_cost:
+                gbest_cost = int(costs[bi])
+                g_items[:] = items[bi]
+                g_counts[:] = counts[bi]
+                g_live = int(live[bi])
+                trace.append((time.perf_counter() - t_start, gbest_cost))
+            # --- periodic best-chain exchange + live-window compaction
+            if self.exchange_every > 0 and (it + 1) % self.exchange_every == 0:
+                worst = int(np.argmax(costs))
+                if costs[worst] > gbest_cost:
+                    items[worst] = g_items
+                    counts[worst] = g_counts
+                    live[worst] = g_live
+                    ids = np.where(g_items >= 0, g_items, n)
+                    bw[worst] = widths_ext[ids].max(-1)
+                    bh[worst] = depths_ext[ids].sum(-1)
+                    costs[worst] = gbest_cost
+                    best_costs[worst] = min(int(best_costs[worst]), gbest_cost)
+                    stale[worst] = 0
+                order = np.argsort(counts == 0, axis=1, kind="stable")
+                items = np.take_along_axis(items, order[:, :, None], 1)
+                counts = np.take_along_axis(counts, order, 1)
+                bw = np.take_along_axis(bw, order, 1)
+                bh = np.take_along_axis(bh, order, 1)
+                live = (counts > 0).sum(1)
+            it += 1
+        wall = time.perf_counter() - t_start
+        chains = [
+            decode_chain_items(prob, items[c], counts[c]) for c in range(n_chains)
+        ]
+        gbest = decode_chain_items(prob, g_items, g_counts)
+        self.last_solution_ = chains[int(np.argmin(costs))]
+        self.last_chains_ = chains
+        return self._result(
+            gbest, gbest_cost, wall, trace, int(steps.sum()), backend,
+            uphill=(uphill_prop, uphill_acc),
+        )
+
+    # ------------------------------------------------------------------ result
+    def _result(self, best, best_cost, wall, trace, iterations, backend, uphill):
+        params = dict(
+            t0=self.t0,
+            rc=self.rc,
+            p_adm_w=self.p_adm_w,
+            p_adm_h=self.p_adm_h,
+            seed=self.seed,
+            backend=backend,
+            n_chains=self.n_chains if backend != "legacy" else 1,
+        )
+        if uphill is not None:
+            params["exchange_every"] = self.exchange_every
+            params["uphill_proposed"], params["uphill_accepted"] = uphill
+        algorithm = "SA-NFD" if self.perturbation == "nfd" else "SA-S"
+        if params["n_chains"] > 1:
+            algorithm += f"x{params['n_chains']}"
+        return PackingResult(
+            solution=best,
+            cost=best_cost,
+            efficiency=best.efficiency(),
+            wall_time_s=wall,
+            algorithm=algorithm + ("-intra" if self.intra_layer else ""),
+            trace=trace,
+            iterations=iterations,
+            params=params,
         )

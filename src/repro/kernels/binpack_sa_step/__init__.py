@@ -1,0 +1,1 @@
+from .ops import metropolis_mask, sa_step_deltas  # noqa: F401

@@ -1,0 +1,127 @@
+"""Dispatcher for the fused SA step: per-chain delta cost + Metropolis rule.
+
+``sa_step_deltas`` is the hot primitive of the batched multi-chain annealer:
+four padded (C, T) int32 matrices (touched-bin geometry before/after one
+buffer-swap move per chain) reduce to a (C,) integer delta-cost vector in a
+single call.  Backends:
+
+* ``"python"`` — vectorized numpy; no JAX import on the hot path.  At SA's
+  tiny per-step shapes (T = 2 * swap_moves) this is the fastest option on a
+  CPU host, where per-call device dispatch would dominate.
+* ``"ref"`` — jit'd pure-jnp oracle (one fused XLA computation per step).
+* ``"pallas"`` — the Pallas TPU kernel (interpreter-validated off-TPU).
+* ``"auto"`` — ``pallas`` when a TPU is attached, else ``python``.
+
+All backends use exact integer arithmetic and return bit-identical deltas;
+the annealer's trajectory therefore cannot depend on the backend choice.
+
+The Metropolis *comparison* (``u < exp(-d_e / T)``) deliberately stays
+host-side in float64 (`metropolis_mask`, or a conditional scalar draw in the
+single-chain engine): the legacy scalar loop draws its uniform only for
+uphill moves and compares against ``math.exp``, and the engine's
+backend-bit-parity contract pins that exact stream and rounding.  Fusing the
+compare into the f32 kernel would break parity for ~1-ulp boundary cases.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.problem import BRAM18_MODES
+
+BACKENDS = ("auto", "python", "ref", "pallas")
+
+
+def _bin_costs_numpy(w: np.ndarray, h: np.ndarray, modes) -> np.ndarray:
+    w = np.asarray(w, dtype=np.int64)[..., None]
+    h = np.asarray(h, dtype=np.int64)[..., None]
+    mode_w = np.asarray([m[0] for m in modes], dtype=np.int64)
+    mode_d = np.asarray([m[1] for m in modes], dtype=np.int64)
+    per_mode = -(-w // mode_w) * -(-h // mode_d)  # ceil div
+    return np.where(w[..., 0] > 0, np.min(per_mode, axis=-1), 0)
+
+
+def sa_step_deltas(
+    old_w,
+    old_h,
+    new_w,
+    new_h,
+    modes=BRAM18_MODES,
+    backend: str = "auto",
+    interpret: bool = True,
+) -> np.ndarray:
+    """(C, T) touched-bin geometry before/after -> (C,) int64 cost deltas.
+
+    Empty slots (w == 0) cost nothing on either side, so rows may be
+    zero-padded to a common touched-bin count.
+    """
+    if backend == "auto":
+        backend, interpret = resolve_auto()
+    if backend == "python":
+        new_c = _bin_costs_numpy(new_w, new_h, modes)
+        old_c = _bin_costs_numpy(old_w, old_h, modes)
+        return np.sum(new_c - old_c, axis=-1)
+    import jax.numpy as jnp
+
+    if backend == "ref":
+        from .ref import sa_step_deltas_ref
+
+        out = _jit_ref()(
+            jnp.asarray(old_w), jnp.asarray(old_h),
+            jnp.asarray(new_w), jnp.asarray(new_h), tuple(modes),
+        )
+    elif backend == "pallas":
+        from .kernel import sa_step_deltas_pallas
+
+        out = sa_step_deltas_pallas(
+            jnp.asarray(old_w), jnp.asarray(old_h),
+            jnp.asarray(new_w), jnp.asarray(new_h), tuple(modes), interpret,
+        )
+    else:
+        raise ValueError(f"unknown backend {backend!r}; options: {BACKENDS}")
+    return np.asarray(out, dtype=np.int64)
+
+
+def metropolis_mask(d_e, temps, u) -> np.ndarray:
+    """Vectorized Metropolis rule: accept downhill, else ``u < exp(-d/T)``.
+
+    Float64 throughout, matching the scalar loop's ``math.exp`` comparison.
+    ``T <= 0`` freezes uphill moves entirely (greedy descent).
+    """
+    d = np.asarray(d_e, dtype=np.float64)
+    t = np.asarray(temps, dtype=np.float64)
+    u = np.asarray(u, dtype=np.float64)
+    safe_t = np.where(t > 0, t, 1.0)
+    p = np.exp(-np.maximum(d, 0.0) / safe_t)
+    return (d < 0) | ((t > 0) & (u < p))
+
+
+_REF_JIT = None
+
+
+def _jit_ref():
+    global _REF_JIT
+    if _REF_JIT is None:
+        import functools
+
+        import jax
+
+        from .ref import sa_step_deltas_ref
+
+        _REF_JIT = functools.partial(jax.jit, static_argnames=("modes",))(
+            sa_step_deltas_ref
+        )
+    return _REF_JIT
+
+
+def resolve_auto() -> tuple[str, bool]:
+    """The SA "auto" policy: (backend, interpret) — the Pallas kernel on a
+    real TPU, host numpy everywhere else (per-step shapes are too small for
+    CPU device dispatch to pay off)."""
+    try:
+        import jax
+
+        if jax.default_backend() == "tpu":
+            return "pallas", False
+    except Exception:
+        pass
+    return "python", True

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused SA delta-cost step.
+
+Reuses the binpack fitness cost primitive: the delta of one annealing move is
+the cost difference of the touched bins before/after, summed per chain.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.binpack_fitness.ref import binpack_fitness_ref
+
+
+def sa_step_deltas_ref(
+    old_w: jax.Array,  # (C, T) int32 — touched-bin geometry before the move
+    old_h: jax.Array,
+    new_w: jax.Array,  # (C, T) int32 — geometry after the move (0 = no bin)
+    new_h: jax.Array,
+    modes: tuple[tuple[int, int], ...],
+) -> jax.Array:
+    """(C,) int32 total BRAM-cost delta per chain."""
+    new_cost = binpack_fitness_ref(new_w, new_h, modes)
+    old_cost = binpack_fitness_ref(old_w, old_h, modes)
+    return jnp.sum(new_cost - old_cost, axis=1)

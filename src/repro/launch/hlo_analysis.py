@@ -263,9 +263,14 @@ class HloCostModel:
                 convert_comps.add(cname)
         for instrs in self.comps.values():
             for i in instrs:
+                # XLA:CPU wraps the widening convert either in a fusion or in
+                # a parallel_convert `call` computation, depending on size
                 widening_convert = (
                     i.op == "convert" and "metadata=" not in i.raw
-                ) or (i.op == "fusion" and any(c in convert_comps for c in i.calls))
+                ) or (
+                    i.op in ("fusion", "call")
+                    and any(c in convert_comps for c in i.calls)
+                )
                 if widening_convert and i.operand_names:
                     opb = self.sizes_global.get(i.operand_names[0], 0)
                     if opb and i.result_bytes > opb:

@@ -4,6 +4,7 @@ import pytest
 import repro.core as c
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("algo", ["nfd", "ffd", "next-fit", "ga-nfd", "sa-nfd", "ga-s", "sa-s"])
 def test_all_algorithms_valid_and_improve(algo):
     prob = c.get_problem("CNV-W1A1")
@@ -14,6 +15,7 @@ def test_all_algorithms_valid_and_improve(algo):
     assert prob.lower_bound() <= r.cost
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", ["CNV-W1A1", "CNV-W2A2", "Tincy-YOLO"])
 def test_ga_nfd_matches_paper_quality(name):
     """GA-NFD should reach (or beat — our baseline mode choice is freer)
@@ -25,6 +27,7 @@ def test_ga_nfd_matches_paper_quality(name):
     assert r.cost <= paper_inter * 1.03, f"{name}: {r.cost} vs paper {paper_inter}"
 
 
+@pytest.mark.slow
 def test_intra_layer_constraint_enforced():
     prob = c.get_problem("CNV-W1A1")
     r = c.pack(prob, "ga-nfd", seed=0, max_seconds=5, intra_layer=True)

@@ -172,6 +172,108 @@ def test_sa_incremental_consistency():
     assert r.solution.cost() == r.solution.cost_full() == r.cost
 
 
+# ------------------------------------------------------- SA backend parity
+def _sa(backend, n_chains=1, **kw):
+    kw.setdefault("seed", 5)
+    kw.setdefault("max_iterations", 400)
+    return SimulatedAnnealingPacker(
+        perturbation="swap", backend=backend, n_chains=n_chains,
+        max_seconds=1e9, patience=10**9, **kw,
+    )
+
+
+def test_sa_swap_backends_bit_identical():
+    """Fixed seed, single chain => the delta engine must reproduce the
+    legacy scalar trajectory bit-for-bit on every backend (the acceptance
+    criterion), including the iteration count and the final bins."""
+    prob = c.get_problem("CNV-W1A1")
+    results = {
+        backend: _sa(backend).pack(prob)
+        for backend in ("legacy", "python", "ref", "pallas", "auto")
+    }
+    ref = results["legacy"]
+    assert ref.iterations == 400
+    for backend, r in results.items():
+        assert r.cost == ref.cost, backend
+        assert [cc for _, cc in r.trace] == [cc for _, cc in ref.trace], backend
+        assert r.solution.bins == ref.solution.bins, backend
+        assert r.iterations == ref.iterations, backend
+        r.solution.validate()
+        assert r.solution.cost() == r.solution.cost_full() == r.cost
+
+
+def test_sa_single_chain_long_trajectory_parity():
+    """Longer cheap (no-jax) run: the conditional Metropolis draw keeps the
+    python engine on the legacy RNG stream through thousands of steps."""
+    prob = c.get_problem("CNV-W2A2")
+    a = _sa("legacy", seed=11, max_iterations=3000).pack(prob)
+    b = _sa("python", seed=11, max_iterations=3000).pack(prob)
+    assert a.cost == b.cost
+    assert a.solution.bins == b.solution.bins
+    assert [cc for _, cc in a.trace] == [cc for _, cc in b.trace]
+
+
+def test_sa_multi_chain_backends_identical():
+    """The vectorized multi-chain engine is deterministic per seed and
+    backend-independent (deltas are exact integers in every backend)."""
+    prob = c.get_problem("CNV-W2A2")
+    results = [
+        _sa(backend, n_chains=5, seed=3, max_iterations=200,
+            exchange_every=50).pack(prob)
+        for backend in ("python", "ref", "pallas")
+    ]
+    first = results[0]
+    assert first.iterations == 5 * 200
+    for r in results[1:]:
+        assert r.cost == first.cost
+        assert r.solution.bins == first.solution.bins
+        assert [cc for _, cc in r.trace] == [cc for _, cc in first.trace]
+    first.solution.validate()
+    # the decoded best independently re-derives the incremental cost
+    assert first.solution.cost() == first.solution.cost_full() == first.cost
+
+
+def test_sa_multi_chain_intra_layer():
+    prob = c.get_problem("CNV-W1A1")
+    r = _sa("python", n_chains=4, seed=1, max_iterations=300,
+            intra_layer=True).pack(prob)
+    r.solution.validate(intra_layer=True)
+
+
+def test_metropolis_acceptance_statistics():
+    """Empirical uphill-acceptance frequency matches exp(-d/T)."""
+    import math
+
+    from repro.kernels.binpack_sa_step.ops import metropolis_mask
+
+    rng = np.random.default_rng(0)
+    n = 40_000
+    d = np.full(n, 3.0)
+    t = np.full(n, 6.0)
+    acc = metropolis_mask(d, t, rng.random(n))
+    p = math.exp(-0.5)
+    sigma = math.sqrt(p * (1 - p) / n)
+    assert abs(acc.mean() - p) < 4 * sigma
+    # downhill always accepted; frozen (T=0) uphill never
+    assert metropolis_mask([-1.0], [0.0], [0.999]).all()
+    assert not metropolis_mask([1.0], [0.0], [0.0]).any()
+
+
+def test_sa_uphill_acceptance_follows_temperature():
+    """Engine-level Metropolis sanity: a hot constant ladder accepts almost
+    every uphill move, a frozen one almost none (rc=0 pins T = T0)."""
+    prob = c.get_problem("CNV-W1A1")
+    rates = {}
+    for label, t0 in (("hot", 1e9), ("cold", 1e-9)):
+        r = _sa("python", n_chains=4, seed=0, max_iterations=300,
+                t0=t0, rc=0.0).pack(prob)
+        p = r.params
+        assert p["uphill_proposed"] > 50
+        rates[label] = p["uphill_accepted"] / p["uphill_proposed"]
+    assert rates["hot"] > 0.95
+    assert rates["cold"] < 0.05
+
+
 # ------------------------------------------------------------ warm starts
 def test_ga_warm_start_from_population():
     prob = c.get_problem("CNV-W1A1")
@@ -194,6 +296,20 @@ def test_sa_warm_start_from_solution():
     r2 = sa.pack(prob, init=r1.solution)
     r2.solution.validate()
     assert r2.cost <= r1.cost
+
+
+def test_sa_multi_chain_warm_start_from_chains():
+    prob = c.get_problem("CNV-W1A1")
+    sa = _sa("python", n_chains=3, seed=0, max_iterations=200)
+    r1 = sa.pack(prob)
+    assert sa.last_chains_ is not None and len(sa.last_chains_) == 3
+    for s in sa.last_chains_:
+        s.validate()
+    r2 = _sa("python", n_chains=3, seed=1, max_iterations=200).pack(
+        prob, init=sa.last_chains_
+    )
+    r2.solution.validate()
+    assert r2.cost <= min(s.cost() for s in sa.last_chains_)
 
 
 # -------------------------------------------------------------- portfolio
@@ -221,6 +337,25 @@ def test_portfolio_via_pack_and_single_island():
     assert r.cost <= prob.baseline_cost()
 
 
+def test_portfolio_batched_sa_island():
+    """One batched sa-s island (sa_chains chains) rides in the portfolio,
+    warm-restarts across rounds, and receives migrants like any island."""
+    prob = c.get_problem("CNV-W1A1")
+    r = c.pack_portfolio(
+        prob,
+        algorithms=("ga-nfd", "sa-s"),
+        n_islands=2,
+        seed=0,
+        max_seconds=1.5,
+        backend="python",
+        sa_chains=3,
+    )
+    r.solution.validate()
+    assert r.cost <= prob.baseline_cost()
+    sa_islands = [i for i in r.params["islands"] if i["algorithm"] == "sa-s"]
+    assert sa_islands
+
+
 def test_portfolio_explicit_island_specs():
     prob = c.get_problem("CNV-W1A1")
     islands = [
@@ -246,3 +381,7 @@ def test_make_packer_rejects_heuristics():
         c.make_packer("ffd")
     with pytest.raises(ValueError):
         GeneticPacker(backend="cuda")
+    with pytest.raises(ValueError):
+        SimulatedAnnealingPacker(backend="cuda")
+    with pytest.raises(ValueError):
+        SimulatedAnnealingPacker(n_chains=0)

@@ -7,6 +7,7 @@ from repro.core.problem import BRAM18_MODES
 from repro.kernels.binpack_fitness.kernel import binpack_fitness_pallas
 from repro.kernels.binpack_fitness.ops import population_costs
 from repro.kernels.binpack_fitness.ref import binpack_fitness_ref
+from repro.kernels.binpack_sa_step.ops import metropolis_mask, sa_step_deltas
 from repro.kernels.packed_gather.kernel import packed_gather_matvec
 from repro.kernels.packed_gather.ops import bank_matvec, split_outputs
 from repro.kernels.packed_gather.ref import packed_gather_ref
@@ -36,6 +37,39 @@ def test_binpack_fitness_against_core_solution(rng):
         w[0, i], h[0, i] = bw, bh
     total = population_costs(jnp.asarray(w), jnp.asarray(h))
     assert int(total[0]) == sol.cost()
+
+
+@pytest.mark.parametrize("c,t", [(1, 1), (3, 4), (16, 8), (9, 130), (40, 2)])
+def test_sa_step_deltas_backends_agree(c, t, rng):
+    """python/ref/pallas SA-step deltas are identical and equal the direct
+    per-bin cost difference, with zero-padded (empty) slots contributing 0."""
+    ow = rng.integers(0, 80, (c, t)).astype(np.int32)
+    ow[rng.random((c, t)) < 0.3] = 0
+    oh = np.where(ow > 0, rng.integers(1, 70_000, (c, t)), 0).astype(np.int32)
+    nw = rng.integers(0, 80, (c, t)).astype(np.int32)
+    nw[rng.random((c, t)) < 0.3] = 0
+    nh = np.where(nw > 0, rng.integers(1, 70_000, (c, t)), 0).astype(np.int32)
+    py = sa_step_deltas(ow, oh, nw, nh, backend="python")
+    rf = sa_step_deltas(ow, oh, nw, nh, backend="ref")
+    pa = sa_step_deltas(ow, oh, nw, nh, backend="pallas")
+    assert np.array_equal(py, rf)
+    assert np.array_equal(py, pa)
+    direct = np.asarray(
+        binpack_fitness_ref(jnp.asarray(nw), jnp.asarray(nh), BRAM18_MODES)
+    ).sum(1) - np.asarray(
+        binpack_fitness_ref(jnp.asarray(ow), jnp.asarray(oh), BRAM18_MODES)
+    ).sum(1)
+    assert np.array_equal(py, direct)
+
+
+def test_metropolis_mask_edge_cases():
+    d = np.array([-5.0, 0.0, 2.0, 2.0, 1.0])
+    t = np.array([0.0, 1.0, 1e12, 1e-12, 0.0])
+    u = np.array([0.99, 0.5, 0.5, 0.5, 0.0])
+    # downhill always; d=0 accepts (u < 1); hot accepts; frozen rejects
+    np.testing.assert_array_equal(
+        metropolis_mask(d, t, u), [True, True, True, False, False]
+    )
 
 
 @pytest.mark.parametrize("seed", range(20))
