@@ -13,6 +13,17 @@ GA tables (``run``):
   time-to-within-1%-of-best for the legacy engine, the new engine, and the
   island portfolio under the same budget.
 
+Heterogeneous OCM table (``run_hetero``):
+
+* ``engine_hetero`` — the same workload packed (a) BRAM18-only, as the
+  paper does, and (b) onto a real device inventory (Alveo U50: 2688
+  BRAM18 + 640 URAM288, the regime where deep ResNets overflow BRAM
+  alone).  Both packings are scored under the device inventory with the
+  engines' unit-weighted overflow penalty: the heterogeneous run must
+  beat the BRAM18-only packing's penalized cost (typically by being
+  feasible at all — the point of arXiv:2011.07317's mixed BRAM+URAM
+  mapping).
+
 SA tables (``run_sa``):
 
 * ``sa_throughput`` — aggregate chain-iterations/sec of the vectorized
@@ -121,6 +132,64 @@ def run(accelerators=None, gens=None, budgets=None, quick=False):
         )
     emit("engine_convergence", header2, rows2)
     return rows, rows2
+
+
+# ------------------------------------------------------------ heterogeneous
+def run_hetero(accelerators=None, device="U50", quick=False, budget_s=None):
+    """BRAM18-only vs heterogeneous device packing of the same workloads.
+
+    Costs are in the device's inventory units (1 unit = 1 BRAM18 worth of
+    capacity; 1 URAM288 = 16 units), so the two scenarios are directly
+    comparable; ``penalized`` adds the engines' inventory-overflow penalty,
+    the quantity the heterogeneous packer actually optimizes.
+    """
+    from repro.core.problem import Solution
+
+    if accelerators is None:
+        accelerators = (
+            ["CNV-W1A1", "RN152-W1A2"]
+            if quick
+            else ["RN50-W1A2", "RN101-W1A2", "RN152-W1A2"]
+        )
+    budget = budget_s if budget_s is not None else (3.0 if quick else 10.0)
+    header = [
+        "accelerator", "device", "scenario", "cost_units", "overflow_units",
+        "penalized", "efficiency_pct", "feasible", "used_bram18", "used_uram288",
+    ]
+    rows = []
+    for name in accelerators:
+        hp = c.hyperparams(name)
+        prob_dev = c.get_problem(name, device=device)
+        # (a) the paper's homogeneous packing, scored on the device
+        r18 = c.pack(
+            c.get_problem(name), "ga-nfd", seed=0, max_seconds=budget, **hp
+        )
+        sol18 = Solution(prob_dev, r18.solution.bins)  # all bins on BRAM18
+        # (b) the heterogeneous packer on the device inventory
+        rdev = c.pack(prob_dev, "ga-nfd", seed=0, max_seconds=budget, **hp)
+        rdev.solution.validate()
+        # score both scenarios with the penalty the packer actually used
+        lam = rdev.params["inventory_penalty"]
+        for scenario, sol in (("bram18-only", sol18), ("hetero", rdev.solution)):
+            cost = sol.cost()
+            ovf = sol.inventory_overflow()
+            used = sol.used_primitives()
+            rows.append(
+                [
+                    name,
+                    device,
+                    scenario,
+                    cost,
+                    ovf,
+                    round(cost + lam * ovf, 1),
+                    round(sol.efficiency() * 100, 1),
+                    ovf == 0,
+                    int(used[0]),
+                    int(used[1]) if len(used) > 1 else 0,
+                ]
+            )
+    emit("engine_hetero", header, rows)
+    return rows
 
 
 # --------------------------------------------------------------------- SA

@@ -14,7 +14,8 @@ import time
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="engine|sa|table3|table4|fig45|tpu|seqpack|kernels|roofline")
+                    help="engine|hetero|sa|table3|table4|fig45|tpu|seqpack|"
+                         "kernels|roofline")
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args(argv)
 
@@ -34,7 +35,11 @@ def main(argv=None) -> None:
     small = ["CNV-W1A1", "CNV-W2A2", "Tincy-YOLO", "RN50-W1A2"] if args.quick else None
 
     jobs = {
-        "engine": lambda: bench_engine.run(quick=args.quick),
+        "engine": lambda: (
+            bench_engine.run(quick=args.quick),
+            bench_engine.run_hetero(quick=args.quick),
+        ),
+        "hetero": lambda: bench_engine.run_hetero(quick=args.quick),
         "sa": lambda: bench_engine.run_sa(quick=args.quick),
         "table3": lambda: bench_table3.run(accelerators=small, budgets=budgets),
         "table4": lambda: bench_table4.run(accelerators=small, budgets=budgets),

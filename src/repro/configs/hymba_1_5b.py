@@ -5,7 +5,7 @@ ssm_state=16, parallel attn+mamba per block fused by per-branch RMSNorm
 averaging.  Sliding-window attention (1024) everywhere except 3 global
 full-attention layers (first / middle / last), as in the paper.  Hymba's
 learnable meta tokens are represented by the first tokens of the sequence
-(stub; noted in DESIGN.md).
+(stub; noted in docs/DESIGN.md section 9).
 """
 import dataclasses
 

@@ -7,26 +7,37 @@ annealing.  `repro.memory` adapts the same machinery to TPU tile grids.
 """
 from .accelerators import (  # noqa: F401
     ACCELERATORS,
+    OCM_DEVICES,
     PAPER_TABLE2,
     PAPER_TABLE3,
     PAPER_TABLE4,
     TABLE1_ROWS,
     get_buffers,
+    get_ocm,
     get_problem,
     hyperparams,
 )
 from .api import ALGORITHMS, make_packer, pack  # noqa: F401
-from .ga import GeneticPacker, buffer_swap  # noqa: F401
+from .ga import GeneticPacker, buffer_swap, kind_reassign  # noqa: F401
 from .nfd import nfd_from_scratch, nfd_pack_order, nfd_repack  # noqa: F401
 from .portfolio import IslandSpec, pack_portfolio  # noqa: F401
 from .problem import (  # noqa: F401
+    BRAM18,
     BRAM18_CAPACITY_BITS,
     BRAM18_MODES,
+    BRAM36,
     BRAMSpec,
     Buffer,
+    LUTRAM64,
+    OCMInventory,
     PackingProblem,
     PackingResult,
+    RAM_KINDS,
+    RAMKind,
     Solution,
+    URAM288,
     buffers_from_shape_rows,
+    greedy_assign_kinds,
+    register_ram_kind,
 )
 from .sa import SimulatedAnnealingPacker  # noqa: F401

@@ -9,11 +9,23 @@ deeper than ResNet-50 ... share the overall structure"); we reconstruct them
 by scaling the RN50 row multiplicities by the published total-bits ratios
 (derived from Table 4's baseline BRAM counts x efficiencies), which
 reproduces the published baseline efficiency to within a fraction of a
-percent.  This is recorded as a deviation in DESIGN.md section 8.
+percent.  This is recorded as a deviation in docs/DESIGN.md section 8.
+
+``OCM_DEVICES`` adds per-device on-chip-memory inventories (nominal
+datasheet BRAM18/URAM288 counts) for the heterogeneous model of
+docs/DESIGN.md section 3: ``get_problem(name, device="U50")`` is the
+one-liner that packs an accelerator onto mixed BRAM+URAM.
 """
 from __future__ import annotations
 
-from .problem import Buffer, PackingProblem, buffers_from_shape_rows
+from .problem import (
+    BRAM18,
+    URAM288,
+    Buffer,
+    OCMInventory,
+    PackingProblem,
+    buffers_from_shape_rows,
+)
 
 # ---------------------------------------------------------------- Table 1
 TABLE1_ROWS: dict[str, list[tuple[int, tuple[int, int, int]]]] = {
@@ -120,14 +132,46 @@ PAPER_TABLE2 = {
 }
 
 
+# Per-device OCM inventories (nominal datasheet primitive counts; BRAM36
+# blocks are modeled as two independent BRAM18s, the finer packing grain).
+OCM_DEVICES: dict[str, OCMInventory] = {
+    # Zynq UltraScale+ ZU7EV (ZCU104): 312 BRAM36 + 96 URAM288
+    "ZU7EV": OCMInventory((BRAM18, URAM288), (624, 96), name="ZU7EV"),
+    # Alveo U50 (VU35P, HBM): 1344 BRAM36 + 640 URAM288 — the interesting
+    # regime: deep ResNets overflow BRAM alone but fit with URAM offload
+    "U50": OCMInventory((BRAM18, URAM288), (2688, 640), name="U50"),
+    # Alveo U250 (VU13P): 2688 BRAM36 + 1280 URAM288
+    "U250": OCMInventory((BRAM18, URAM288), (5376, 1280), name="U250"),
+    # Alveo U280 (VU37P, HBM): 2016 BRAM36 + 960 URAM288
+    "U280": OCMInventory((BRAM18, URAM288), (4032, 960), name="U280"),
+}
+
+
+def get_ocm(device: str) -> OCMInventory:
+    if device not in OCM_DEVICES:
+        raise KeyError(
+            f"unknown device {device!r}; options: {tuple(OCM_DEVICES)}"
+        )
+    return OCM_DEVICES[device]
+
+
 def get_buffers(name: str) -> list[Buffer]:
     if name not in TABLE1_ROWS:
         raise KeyError(f"unknown accelerator {name!r}; options: {ACCELERATORS}")
     return buffers_from_shape_rows(TABLE1_ROWS[name])
 
 
-def get_problem(name: str, max_items: int = 4) -> PackingProblem:
-    return PackingProblem(get_buffers(name), max_items=max_items, name=name)
+def get_problem(
+    name: str, max_items: int = 4, device: str | None = None
+) -> PackingProblem:
+    """Build a Table-1 problem; ``device`` selects a heterogeneous OCM
+    inventory from ``OCM_DEVICES`` (default: unbounded BRAM18, the paper)."""
+    return PackingProblem(
+        get_buffers(name),
+        max_items=max_items,
+        name=name if device is None else f"{name}@{device}",
+        ocm=get_ocm(device) if device is not None else None,
+    )
 
 
 def hyperparams(name: str) -> dict:

@@ -50,6 +50,8 @@ def make_packer(
             patience=hyper.get("patience", 200),
             seed=seed,
             backend=backend,
+            p_kind=hyper.get("p_kind", 0.25),
+            inventory_penalty=hyper.get("inventory_penalty", 32.0),
         )
     if algorithm in ("sa-nfd", "sa-s"):
         return SimulatedAnnealingPacker(
@@ -71,6 +73,8 @@ def make_packer(
             exchange_every=hyper.get("exchange_every", 256),
             ladder_min=hyper.get("ladder_min", 0.25),
             ladder_max=hyper.get("ladder_max", 4.0),
+            p_kind=hyper.get("p_kind", 0.15),
+            inventory_penalty=hyper.get("inventory_penalty", 32.0),
         )
     raise ValueError(f"no evolutionary packer named {algorithm!r}")
 
@@ -94,6 +98,12 @@ def pack(
     they select the multi-chain annealer (pass ``n_chains=K`` to run K
     temperature-laddered chains through the fused delta-cost kernel;
     "sa-nfd" always runs the scalar loop).
+
+    On heterogeneous problems (``PackingProblem(ocm=...)`` — e.g.
+    ``get_problem("RN152-W1A2", device="U50")``) every engine additionally
+    explores per-bin RAM-kind reassignment (``p_kind``) and penalizes
+    inventory overflow (``inventory_penalty`` per unit); single-kind
+    problems are bit-identical to previous releases.
     """
     algorithm = algorithm.lower()
     if algorithm in ("ga-nfd", "ga-s", "sa-nfd", "sa-s"):

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .problem import PackingProblem, Solution
+from .problem import PackingProblem, Solution, greedy_assign_kinds
 
 
 def next_fit(prob: PackingProblem, order: np.ndarray | None = None) -> Solution:
@@ -39,7 +39,7 @@ def next_fit(prob: PackingProblem, order: np.ndarray | None = None) -> Solution:
             cur, cur_w, cur_h = [i], w, d
     if cur:
         bins.append(cur)
-    return Solution(prob, bins)
+    return greedy_assign_kinds(Solution(prob, bins))
 
 
 def first_fit_decreasing(prob: PackingProblem, intra_layer: bool = False) -> Solution:
@@ -71,7 +71,7 @@ def first_fit_decreasing(prob: PackingProblem, intra_layer: bool = False) -> Sol
         if not placed:
             bins.append([i])
             geom.append((w, d, prob.bin_cost(w, d)))
-    return Solution(prob, bins)
+    return greedy_assign_kinds(Solution(prob, bins))
 
 
 def singleton(prob: PackingProblem) -> Solution:

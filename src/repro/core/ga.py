@@ -23,6 +23,15 @@ Evaluation backends (`GeneticPacker(backend=...)`):
 
 All backends are bit-identical for a fixed seed: cost arithmetic is exact
 integer math and the RNG consumption order never depends on the backend.
+
+Heterogeneous OCM problems (``PackingProblem(ocm=...)``) add a RAM-kind
+dimension: with probability ``p_kind`` a mutation reassigns random bins'
+RAM kinds instead of moving buffers, fitness adds ``inventory_penalty`` per
+unit of inventory overflow, and selection/best-tracking use the penalized
+cost so a feasible packing always beats an overflowing one.  The batched
+backends carry a parallel (P, NB) kind matrix through the per-kind-mode
+``binpack_fitness`` tables.  Single-kind problems skip every hetero branch
+(and its RNG draws), keeping the legacy streams bit-exact.
 """
 from __future__ import annotations
 
@@ -86,6 +95,15 @@ def _apply_one_swap_move(
         touched.add(dst)
 
 
+def _draw_other_kind(rng: np.random.Generator, old_k: int, n_kinds: int) -> int:
+    """One RNG draw -> a uniformly random kind different from ``old_k``.
+
+    Shared by the GA's ``kind_reassign`` and the SA move path inside
+    ``apply_swap_moves`` so the two streams stay bit-identical by
+    construction (the parity tests pin both)."""
+    return (old_k + 1 + int(rng.integers(n_kinds - 1))) % n_kinds
+
+
 def apply_swap_moves(
     sol: Solution,
     rng: np.random.Generator,
@@ -93,18 +111,35 @@ def apply_swap_moves(
     intra_layer: bool = False,
     undo: list | None = None,
     touched: set | None = None,
+    p_kind: float = 0.0,
 ) -> None:
     """Apply an MPack buffer-swap move sequence to ``sol.bins`` IN PLACE.
 
     Consumes ``rng`` in exactly the order the historical ``buffer_swap``
     did (the engine backend-parity tests pin trajectories on this stream).
+    With ``p_kind > 0`` on a heterogeneous problem, each move is — with
+    that probability — a RAM-kind reassignment of a random bin instead of
+    a buffer swap (recorded in ``undo`` with the ``j == -2`` sentinel).
+    ``p_kind == 0`` (the default, and the only value single-kind engines
+    pass) draws nothing extra, preserving the legacy stream exactly.
     The geometry cache is NOT updated: callers either commit with
     ``sol.touch(*touched)`` + ``sol.drop_empty()`` or roll back with
     :func:`undo_swap_moves`.
     """
     bins = sol.bins
     prob = sol.problem
+    n_kinds = prob.n_kinds
+    kind_moves = p_kind > 0.0 and n_kinds > 1
     for _ in range(n_moves):
+        if kind_moves and rng.random() < p_kind:
+            bi = int(rng.integers(len(bins)))
+            old_k = int(sol.kinds[bi])
+            sol.kinds[bi] = _draw_other_kind(rng, old_k, n_kinds)
+            if undo is not None:
+                undo.append((bi, old_k, -1, -1, -2, -1))
+            if touched is not None:
+                touched.add(bi)
+            continue
         if len(bins) < 2:
             break
         src = int(rng.integers(len(bins)))
@@ -119,10 +154,13 @@ def apply_swap_moves(
 
 
 def undo_swap_moves(sol: Solution, undo: list) -> None:
-    """Reverse a recorded move sequence, restoring exact bin contents/order."""
+    """Reverse a recorded move sequence, restoring exact bin contents/order
+    (and kind lanes, for ``j == -2`` kind-reassignment entries)."""
     bins = sol.bins
     for src, k, item, dst, j, other in reversed(undo):
-        if j < 0:
+        if j == -2:
+            sol.kinds[src] = k
+        elif j < 0:
             bins[dst].pop()
             bins[src].insert(k, item)
         else:
@@ -131,7 +169,11 @@ def undo_swap_moves(sol: Solution, undo: list) -> None:
 
 
 def buffer_swap(
-    sol: Solution, rng: np.random.Generator, n_moves: int = 1, intra_layer: bool = False
+    sol: Solution,
+    rng: np.random.Generator,
+    n_moves: int = 1,
+    intra_layer: bool = False,
+    p_kind: float = 0.0,
 ) -> Solution:
     """MPack-style perturbation: move random buffers between random bins.
 
@@ -141,18 +183,52 @@ def buffer_swap(
     out = sol.copy()
     touched: set[int] = set()
     apply_swap_moves(out, rng, n_moves=n_moves, intra_layer=intra_layer,
-                     touched=touched)
+                     touched=touched, p_kind=p_kind)
     if touched:
         out.touch(*touched)
     out.drop_empty()
     return out
 
 
-def fitness(sol: Solution, layer_weight: float, cost: int | float | None = None) -> float:
-    """Weighted-sum fitness; pass a precomputed ``cost`` to avoid re-deriving it."""
+def kind_reassign(
+    sol: Solution, rng: np.random.Generator, n_moves: int = 1
+) -> Solution:
+    """Heterogeneous mutation: move random bins to a random other RAM kind.
+
+    The inventory penalty in the fitness turns this into directed pressure:
+    reassignments that relieve an over-subscribed kind survive selection.
+    Only meaningful on multi-kind problems (``problem.n_kinds > 1``).
+    """
+    out = sol.copy()
+    n_kinds = out.problem.n_kinds
+    touched: set[int] = set()
+    for _ in range(n_moves):
+        bi = int(rng.integers(len(out.bins)))
+        out.kinds[bi] = _draw_other_kind(rng, int(out.kinds[bi]), n_kinds)
+        touched.add(bi)
+    out.touch(*touched)
+    return out
+
+
+def fitness(
+    sol: Solution,
+    layer_weight: float,
+    cost: int | float | None = None,
+    inventory_penalty: float = 0.0,
+    overflow: int | None = None,
+) -> float:
+    """Weighted-sum fitness; pass a precomputed ``cost`` to avoid re-deriving it.
+
+    ``inventory_penalty`` scales the unit-weighted inventory overflow
+    (heterogeneous devices; zero and free on single-kind problems); pass a
+    precomputed ``overflow`` to avoid re-deriving that too."""
     f = float(sol.cost() if cost is None else cost)
     if layer_weight > 0.0:
         f += layer_weight * sol.distinct_layers_per_bin()
+    if inventory_penalty > 0.0:
+        f += inventory_penalty * (
+            sol.inventory_overflow() if overflow is None else overflow
+        )
     return f
 
 
@@ -176,6 +252,8 @@ class GeneticPacker:
         patience: int = 200,
         seed: int = 0,
         backend: str = "auto",
+        p_kind: float = 0.25,
+        inventory_penalty: float = 32.0,
     ):
         if mutation not in ("nfd", "swap"):
             raise ValueError(f"unknown mutation {mutation!r}")
@@ -185,6 +263,7 @@ class GeneticPacker:
         del self.__dict__["self"]
         # warm state for portfolio restarts (set after each pack())
         self.last_population_: list[Solution] | None = None
+        self._hetero = False  # set per problem in pack()
 
     @property
     def name(self) -> str:
@@ -203,6 +282,11 @@ class GeneticPacker:
     def _mutate(
         self, sol: Solution, rng: np.random.Generator, use_cache: bool = True
     ) -> Solution:
+        # heterogeneous OCM: a fraction of mutations reassign RAM kinds
+        # instead of moving buffers (the gate is skipped entirely — no RNG
+        # draw — on single-kind problems, pinning the legacy stream)
+        if self._hetero and rng.random() < self.p_kind:
+            return kind_reassign(sol, rng)
         if self.mutation == "nfd":
             return nfd_repack(
                 sol,
@@ -221,21 +305,43 @@ class GeneticPacker:
 
     # ---------------------------------------------------------------- eval
     @staticmethod
-    def _batched_costs(W: np.ndarray, H: np.ndarray, backend: str) -> np.ndarray:
+    def _batched_costs(
+        W: np.ndarray,
+        H: np.ndarray,
+        backend: str,
+        Km: np.ndarray | None = None,
+        kind_tables=None,
+        modes=None,
+    ) -> np.ndarray:
         import jax.numpy as jnp
 
         from repro.kernels.binpack_fitness.ops import population_costs
 
         interpret = backend == "pallas" and _default_jax_backend() != "tpu"
-        totals = population_costs(
-            jnp.asarray(W), jnp.asarray(H), backend=backend, interpret=interpret
-        )
+        if Km is None:
+            # single-kind: the problem's own mode table (equal to
+            # BRAM18_MODES on default problems, so the jit cache is shared)
+            totals = population_costs(
+                jnp.asarray(W), jnp.asarray(H), modes=modes,
+                backend=backend, interpret=interpret,
+            )
+        else:
+            totals = population_costs(
+                jnp.asarray(W),
+                jnp.asarray(H),
+                backend=backend,
+                interpret=interpret,
+                kinds=jnp.asarray(Km),
+                kind_tables=kind_tables,
+            )
         return np.asarray(totals, dtype=np.float64)
 
     def _fitness_legacy(self, sol: Solution, cost: float) -> float:
         f = float(cost)
         if self.layer_weight > 0.0:
             f += self.layer_weight * sol.distinct_layers_per_bin_full()
+        if self._hetero and self.inventory_penalty > 0.0:
+            f += self.inventory_penalty * sol.inventory_overflow()
         return f
 
     # ---------------------------------------------------------------- pack
@@ -247,6 +353,9 @@ class GeneticPacker:
         backend = self._resolve_backend()
         batched = backend in ("ref", "pallas")
         use_cache = backend != "legacy"
+        self._hetero = prob.n_kinds > 1
+        inv_pen = self.inventory_penalty if self._hetero else 0.0
+        modes0 = prob.kind_tables[0][1]  # == BRAM18_MODES on default problems
         pop: list[Solution] = [s.copy() for s in (init_pop or [])][: self.n_pop]
         pop += [
             nfd_from_scratch(
@@ -259,33 +368,63 @@ class GeneticPacker:
             )
             for k in range(len(pop), self.n_pop)
         ]
+        # on heterogeneous problems selection AND best-tracking use the
+        # inventory-penalized cost, so an overflowing packing can never beat
+        # a feasible one; ``ovfs`` mirrors ``costs`` per individual
+        ovfs = np.zeros(self.n_pop, dtype=np.float64) if self._hetero else None
         if batched:
             # population geometry matrices: row i = per-bin (width, height) of
             # pop[i], zero-padded to the worst case of one buffer per bin
             W = np.zeros((self.n_pop, prob.n), dtype=np.int32)
             H = np.zeros((self.n_pop, prob.n), dtype=np.int32)
+            # heterogeneous problems add a parallel RAM-kind matrix
+            Km = np.zeros((self.n_pop, prob.n), dtype=np.int32) if self._hetero else None
+            kt = prob.kind_tables if self._hetero else None
             for i, s in enumerate(pop):
                 s.fill_geometry(W[i], H[i])
-            costs = self._batched_costs(W, H, backend)
+                if Km is not None:
+                    s.fill_kinds(Km[i])
+                    ovfs[i] = s.inventory_overflow()
+            costs = self._batched_costs(W, H, backend, Km, kt, modes0)
             fits = np.asarray(
-                [fitness(s, self.layer_weight, cost=c) for s, c in zip(pop, costs)]
+                [
+                    fitness(s, self.layer_weight, cost=c, inventory_penalty=inv_pen,
+                            overflow=None if ovfs is None else ovfs[i])
+                    for i, (s, c) in enumerate(zip(pop, costs))
+                ]
             )
         else:
-            W = H = None
+            W = H = Km = None
+            kt = None
             if use_cache:
                 costs = np.asarray([s.cost() for s in pop], dtype=np.float64)
+                if ovfs is not None:
+                    for i, s in enumerate(pop):
+                        ovfs[i] = s.inventory_overflow()
                 fits = np.asarray(
-                    [fitness(s, self.layer_weight, cost=c) for s, c in zip(pop, costs)]
+                    [
+                        fitness(s, self.layer_weight, cost=c, inventory_penalty=inv_pen,
+                                overflow=None if ovfs is None else ovfs[i])
+                        for i, (s, c) in enumerate(zip(pop, costs))
+                    ]
                 )
             else:
                 costs = np.asarray([s.cost_full() for s in pop], dtype=np.float64)
+                if ovfs is not None:
+                    for i, s in enumerate(pop):
+                        ovfs[i] = s.inventory_overflow()
                 fits = np.asarray(
                     [self._fitness_legacy(s, c) for s, c in zip(pop, costs)]
                 )
-        best_i = int(np.argmin(costs))
+        sel = costs if ovfs is None else costs + inv_pen * ovfs
+        best_i = int(np.argmin(sel))
         best = pop[best_i].copy()
         best_cost = int(costs[best_i])
-        trace = [(time.perf_counter() - t0, best_cost)]
+        best_sel = float(sel[best_i])
+        # hetero traces record the penalized cost (the annealed/selected
+        # quantity) so the curve stays monotone; raw == penalized otherwise
+        trace = [(time.perf_counter() - t0,
+                  best_sel if self._hetero else best_cost)]
         stale = 0
         gen = 0
         while gen < self.max_generations:
@@ -300,26 +439,41 @@ class GeneticPacker:
             for i in range(self.n_pop):
                 if rng.random() < self.p_mut:
                     pop[i] = self._mutate(pop[i], rng, use_cache=use_cache)
+                    if ovfs is not None:
+                        ovfs[i] = pop[i].inventory_overflow()
                     if batched:
                         pop[i].fill_geometry(W[i], H[i])
+                        if Km is not None:
+                            pop[i].fill_kinds(Km[i])
                         mutated.append(i)
                     elif use_cache:
                         costs[i] = pop[i].cost()
-                        fits[i] = fitness(pop[i], self.layer_weight, cost=costs[i])
+                        fits[i] = fitness(
+                            pop[i], self.layer_weight, cost=costs[i],
+                            inventory_penalty=inv_pen,
+                            overflow=None if ovfs is None else ovfs[i],
+                        )
                     else:
                         costs[i] = pop[i].cost_full()
                         fits[i] = self._fitness_legacy(pop[i], costs[i])
             if batched and mutated:
-                totals = self._batched_costs(W, H, backend)
+                totals = self._batched_costs(W, H, backend, Km, kt, modes0)
                 for i in mutated:
                     costs[i] = totals[i]
-                    fits[i] = fitness(pop[i], self.layer_weight, cost=costs[i])
-            # --- track best
-            gi = int(np.argmin(costs))
-            if int(costs[gi]) < best_cost:
+                    fits[i] = fitness(
+                        pop[i], self.layer_weight, cost=costs[i],
+                        inventory_penalty=inv_pen,
+                        overflow=None if ovfs is None else ovfs[i],
+                    )
+            # --- track best (penalized on heterogeneous problems)
+            sel = costs if ovfs is None else costs + inv_pen * ovfs
+            gi = int(np.argmin(sel))
+            if float(sel[gi]) < best_sel:
+                best_sel = float(sel[gi])
                 best_cost = int(costs[gi])
                 best = pop[gi].copy()
-                trace.append((time.perf_counter() - t0, best_cost))
+                trace.append((time.perf_counter() - t0,
+                              best_sel if self._hetero else best_cost))
                 stale = 0
             else:
                 stale += 1
@@ -330,12 +484,22 @@ class GeneticPacker:
             pop = [pop[int(w)] for w in winners]
             costs = costs[winners]
             fits = fits[winners]
+            if ovfs is not None:
+                ovfs = ovfs[winners]
             if batched:
                 W = W[winners]
                 H = H[winners]
+                if Km is not None:
+                    Km = Km[winners]
         wall = time.perf_counter() - t0
-        trace.append((wall, best_cost))
+        trace.append((wall, best_sel if self._hetero else best_cost))
         self.last_population_ = pop
+        extra = (
+            dict(p_kind=self.p_kind, inventory_penalty=self.inventory_penalty,
+                 overflow=best.inventory_overflow())
+            if self._hetero
+            else {}
+        )
         return PackingResult(
             solution=best,
             cost=best_cost,
@@ -352,6 +516,7 @@ class GeneticPacker:
                 p_adm_h=self.p_adm_h,
                 seed=self.seed,
                 backend=backend,
+                **extra,
             ),
         )
 

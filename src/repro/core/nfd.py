@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .problem import PackingProblem, Solution
+from .problem import PackingProblem, Solution, greedy_assign_kinds
 
 
 def nfd_pack_order(
@@ -128,20 +128,30 @@ def nfd_repack(
     new_bins = nfd_pack_order(
         prob, pool, rng, p_adm_w=p_adm_w, p_adm_h=p_adm_h, intra_layer=intra_layer
     )
+    # kept bins carry their RAM kinds into the child; freshly repacked bins
+    # start on kind 0 (the finest-grained primitive) — the engines' kind
+    # moves and inventory penalty re-balance them
     if not use_cache:
-        return Solution(prob, keep + new_bins)
+        if prob.n_kinds == 1:
+            return Solution(prob, keep + new_bins)
+        kept_kinds = [int(k) for k, m in zip(sol.kinds, mask) if not m]
+        return Solution(
+            prob, keep + new_bins, kinds=kept_kinds + [0] * len(new_bins)
+        )
     # Kept bin lists are SHARED with the parent (persistent-structure style):
     # nothing in the engine mutates a bin list without copying the solution
     # first (buffer_swap works on a fresh copy()), so sharing is safe and
     # avoids an O(n) deep copy per mutation.  new_bins are fresh lists and
     # their geometry rows start dirty.
     nk, nn = len(keep), len(new_bins)
-    geom = np.empty((nk + nn, 5), dtype=np.int64)
+    geom = np.empty((nk + nn, 6), dtype=np.int64)
     geom[:nk] = sol._geom[~mask]
     dirty = np.empty(nk + nn, dtype=bool)
     dirty[:nk] = sol._dirty[~mask]
     dirty[nk:] = True
-    return Solution._with_geometry(prob, keep + new_bins, geom, dirty)
+    kinds = np.zeros(nk + nn, dtype=np.int64)
+    kinds[:nk] = sol.kinds[~mask]
+    return Solution._with_geometry(prob, keep + new_bins, geom, dirty, kinds)
 
 
 def nfd_from_scratch(
@@ -163,9 +173,12 @@ def nfd_from_scratch(
         order = order[np.argsort(prob.widths[order], kind="stable")]
     if intra_layer:
         order = order[np.argsort(prob.layers[order], kind="stable")]
-    return Solution(
+    sol = Solution(
         prob,
         nfd_pack_order(
             prob, order, rng, p_adm_w=p_adm_w, p_adm_h=p_adm_h, intra_layer=intra_layer
         ),
     )
+    # heterogeneous devices: start from an inventory-feasible kind lane
+    # (deterministic, no RNG draws; no-op on single-kind problems)
+    return greedy_assign_kinds(sol)

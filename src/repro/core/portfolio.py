@@ -64,13 +64,15 @@ class _Island:
             self.chains = self.packer.last_chains_
         return result
 
-    def migrate_in(self, best: Solution, best_cost: int) -> None:
-        """The global best replaces this island's worst warm individual/chain."""
+    def migrate_in(self, best: Solution, best_val: float, score) -> None:
+        """The global best replaces this island's worst warm individual/chain
+        (``score`` is the inventory-penalized cost on heterogeneous problems,
+        the plain cost otherwise)."""
         warm = self.pop if self.is_ga else self.chains
         if not warm:
             return
-        worst = max(range(len(warm)), key=lambda i: warm[i].cost())
-        if warm[worst].cost() > best_cost:
+        worst = max(range(len(warm)), key=lambda i: score(warm[i]))
+        if score(warm[worst]) > best_val:
             warm[worst] = best.copy()
 
 
@@ -116,6 +118,13 @@ def pack_portfolio(
     one such island replaces what used to take K scalar SA islands (and
     their K thread slots); its chains warm-restart and receive migrants
     like any other island's population.
+
+    Heterogeneous device scenarios need no extra wiring: build the problem
+    with an inventory (``get_problem(name, device="U280")``) and every
+    island explores RAM-kind lanes under the shared inventory penalty —
+    migrated solutions carry their kind lanes with them, and the ``p_kind``
+    / ``inventory_penalty`` hyperparameters pass through like any Table-2
+    name.
     """
     from .api import make_packer  # late import: api imports nothing from here
 
@@ -150,10 +159,22 @@ def pack_portfolio(
     interval = migration_every if migration_every is not None else max_seconds / 4.0
     interval = max(interval, 1e-3)
 
+    # island comparisons use the inventory-penalized cost on heterogeneous
+    # problems so a feasible packing always outranks an overflowing one
+    hetero = prob.n_kinds > 1
+    lam = hyper.get("inventory_penalty", 32.0)
+    if hetero:
+        def score(sol: Solution) -> float:
+            return sol.cost() + lam * sol.inventory_overflow()
+    else:
+        def score(sol: Solution) -> float:
+            return sol.cost()
+
     t0 = time.perf_counter()
     rounds: list[tuple[float, list[PackingResult]]] = []
     best_sol: Solution | None = None
     best_cost = 0
+    best_val = 0.0
     iterations = 0
     round_idx = 0
     with ThreadPoolExecutor(max_workers=max_workers or len(pool)) as ex:
@@ -170,10 +191,11 @@ def pack_portfolio(
             rounds.append((elapsed, results))
             for r in results:
                 iterations += r.iterations
-                if best_sol is None or r.cost < best_cost:
-                    best_sol, best_cost = r.solution, r.cost
+                val = score(r.solution)
+                if best_sol is None or val < best_val:
+                    best_sol, best_cost, best_val = r.solution, r.cost, val
             for isl in pool:
-                isl.migrate_in(best_sol, best_cost)
+                isl.migrate_in(best_sol, best_val, score)
             round_idx += 1
     wall = time.perf_counter() - t0
     trace = _merge_traces(rounds)

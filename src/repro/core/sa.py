@@ -38,6 +38,17 @@ Three engines share this class:
   from the scalar loop's list order (array removal swaps with the last
   slot), so multi-chain runs define their own — still backend-identical —
   trajectories.
+
+On heterogeneous OCM problems every engine anneals the inventory-penalized
+cost: with probability ``p_kind`` a move is a RAM-kind flip of a random bin
+(scalar loop + single-chain engine share the draw inside
+``apply_swap_moves``; the multi-chain engine widens its uniform block from
+4 to 6 rows), the delta step routes per-slot kind lanes through the
+per-kind mode tables of ``binpack_sa_step``, and the penalty delta comes
+from exact per-kind primitive bookkeeping — so scalar/delta parity and
+multi-chain backend parity both extend to the heterogeneous model.
+Single-kind problems take none of these branches and stay bit-identical to
+PR 2.
 """
 from __future__ import annotations
 
@@ -52,6 +63,7 @@ from .ga import (
     _default_jax_backend,
     apply_swap_moves,
     buffer_swap,
+    kind_reassign,
     undo_swap_moves,
 )
 from .nfd import nfd_from_scratch, nfd_repack
@@ -62,6 +74,7 @@ from .problem import (
     decode_chain_items,
     encode_chain_geometry,
     encode_chain_items,
+    encode_chain_kinds,
 )
 
 
@@ -87,6 +100,8 @@ class SimulatedAnnealingPacker:
         exchange_every: int = 256,
         ladder_min: float = 0.25,
         ladder_max: float = 4.0,
+        p_kind: float = 0.15,
+        inventory_penalty: float = 32.0,
     ):
         if perturbation not in ("nfd", "swap"):
             raise ValueError(f"unknown perturbation {perturbation!r}")
@@ -99,6 +114,7 @@ class SimulatedAnnealingPacker:
         # warm state for portfolio restarts (set after each pack())
         self.last_solution_: Solution | None = None
         self.last_chains_: list[Solution] | None = None
+        self._hetero = False  # set per problem in pack()
 
     @property
     def name(self) -> str:
@@ -118,6 +134,10 @@ class SimulatedAnnealingPacker:
 
     def _perturb(self, sol: Solution, rng: np.random.Generator) -> Solution:
         if self.perturbation == "nfd":
+            # heterogeneous OCM: a fraction of NFD perturbations reassign RAM
+            # kinds instead (no RNG draw at all on single-kind problems)
+            if self._hetero and rng.random() < self.p_kind:
+                return kind_reassign(sol, rng)
             return nfd_repack(
                 sol,
                 rng,
@@ -129,7 +149,8 @@ class SimulatedAnnealingPacker:
                 max_bins=self.nfd_max_bins,
             )
         return buffer_swap(
-            sol, rng, n_moves=self.swap_moves, intra_layer=self.intra_layer
+            sol, rng, n_moves=self.swap_moves, intra_layer=self.intra_layer,
+            p_kind=self.p_kind if self._hetero else 0.0,
         )
 
     def pack(
@@ -145,6 +166,7 @@ class SimulatedAnnealingPacker:
         perturbation the backend selects the engine, ``legacy`` being the
         scalar loop.
         """
+        self._hetero = prob.n_kinds > 1
         if self.perturbation == "nfd" or self._resolve_backend() == "legacy":
             return self._pack_scalar(prob, init)
         if self.n_chains == 1:
@@ -165,9 +187,15 @@ class SimulatedAnnealingPacker:
             p_adm_h=self.p_adm_h,
             intra_layer=self.intra_layer,
         )
+        hetero = self._hetero
+        lam = self.inventory_penalty
         cost = sol.cost()
-        best, best_cost = sol.copy(), cost
-        trace = [(time.perf_counter() - t_start, best_cost)]
+        ovf = sol.inventory_overflow() if hetero else 0
+        best, best_cost, best_ovf = sol.copy(), cost, ovf
+        # hetero traces record the penalized cost (the annealed quantity) so
+        # the curve stays monotone; raw == penalized on single-kind problems
+        trace = [(time.perf_counter() - t_start,
+                  best_cost + lam * best_ovf if hetero else best_cost)]
         it = 0
         stale = 0
         while it < self.max_iterations and stale < self.patience:
@@ -176,12 +204,25 @@ class SimulatedAnnealingPacker:
             temp = self.t0 / (1.0 + self.rc * it)
             cand = self._perturb(sol, rng)
             cand_cost = cand.cost()
+            # the annealed energy is the inventory-penalized cost; the two
+            # int deltas are kept separate so the single-kind path stays in
+            # exact integer arithmetic (d_e is then just the cost delta)
             d_e = cand_cost - cost
+            if hetero:
+                cand_ovf = cand.inventory_overflow()
+                d_e = d_e + lam * (cand_ovf - ovf)
+            else:
+                cand_ovf = 0
             if d_e < 0 or (temp > 0 and rng.random() < math.exp(-d_e / temp)):
-                sol, cost = cand, cand_cost
-            if cost < best_cost:
-                best, best_cost = sol.copy(), cost
-                trace.append((time.perf_counter() - t_start, best_cost))
+                sol, cost, ovf = cand, cand_cost, cand_ovf
+            if hetero:
+                improved = (cost - best_cost) + lam * (ovf - best_ovf) < 0
+            else:
+                improved = cost < best_cost
+            if improved:
+                best, best_cost, best_ovf = sol.copy(), cost, ovf
+                trace.append((time.perf_counter() - t_start,
+                              best_cost + lam * best_ovf if hetero else best_cost))
                 stale = 0
             else:
                 stale += 1
@@ -217,17 +258,33 @@ class SimulatedAnnealingPacker:
             p_adm_h=self.p_adm_h,
             intra_layer=self.intra_layer,
         )
+        hetero = self._hetero
+        lam = self.inventory_penalty
+        pk = self.p_kind if hetero else 0.0
+        kt = prob.kind_tables if hetero else None
+        modes0 = prob.kind_tables[0][1]  # == BRAM18_MODES on default problems
         cost = int(sol.cost())
         chain_w = np.zeros((1, prob.n), dtype=np.int32)
         chain_h = np.zeros_like(chain_w)
         sol.fill_geometry(chain_w[0], chain_h[0])
-        best, best_cost = sol.copy(), cost
-        trace = [(time.perf_counter() - t_start, best_cost)]
+        if hetero:
+            chain_k = np.zeros((1, prob.n), dtype=np.int32)
+            sol.fill_kinds(chain_k[0])
+            used = sol.used_primitives()
+            ovf = int(prob.overflow_units(used))
+        else:
+            chain_k = None
+            ovf = 0
+        best, best_cost, best_ovf = sol.copy(), cost, ovf
+        trace = [(time.perf_counter() - t_start,
+                  best_cost + lam * best_ovf if hetero else best_cost)]
         width = 2 * max(self.swap_moves, 1)
         old_w = np.zeros((1, width), dtype=np.int32)
         old_h = np.zeros_like(old_w)
         new_w = np.zeros_like(old_w)
         new_h = np.zeros_like(old_w)
+        old_k = np.zeros_like(old_w) if hetero else None
+        new_k = np.zeros_like(old_w) if hetero else None
         undo: list = []
         uphill_prop = 0
         uphill_acc = 0
@@ -237,12 +294,14 @@ class SimulatedAnnealingPacker:
             if (it & 0xFF) == 0 and time.perf_counter() - t_start > self.max_seconds:
                 break
             temp = self.t0 / (1.0 + self.rc * it)
-            # --- propose in place (legacy RNG stream)
+            # --- propose in place (legacy RNG stream; kind moves only when
+            # the problem is heterogeneous, matching the scalar loop)
             undo.clear()
             tset: set[int] = set()
             apply_swap_moves(
                 sol, rng, n_moves=self.swap_moves,
                 intra_layer=self.intra_layer, undo=undo, touched=tset,
+                p_kind=pk,
             )
             tl = sorted(tset)
             k = len(tl)
@@ -256,32 +315,76 @@ class SimulatedAnnealingPacker:
                 ws, hs = sol.scan_bin_geometry(tl)
                 new_w[0, :k] = ws
                 new_h[0, :k] = hs
-            d_e = int(
-                sa_step_deltas(
-                    old_w, old_h, new_w, new_h, backend=backend, interpret=interpret
-                )[0]
-            )
+            if hetero:
+                old_k[0] = 0
+                new_k[0] = 0
+                if k:
+                    old_k[0, :k] = chain_k[0, tl]
+                    new_k[0, :k] = sol.kinds[tl]
+                d_cost = int(
+                    sa_step_deltas(
+                        old_w, old_h, new_w, new_h, backend=backend,
+                        interpret=interpret, old_k=old_k, new_k=new_k,
+                        kind_tables=kt,
+                    )[0]
+                )
+                # inventory-penalty delta from the touched bins' primitive
+                # usage (exact integer bookkeeping, O(touched) cache hits)
+                if prob._any_bounded:
+                    used2 = used.copy()
+                    for t in range(k):
+                        if old_w[0, t] > 0:
+                            used2[old_k[0, t]] -= prob.bin_primitives(
+                                int(old_w[0, t]), int(old_h[0, t]), int(old_k[0, t])
+                            )
+                        if new_w[0, t] > 0:
+                            used2[new_k[0, t]] += prob.bin_primitives(
+                                int(new_w[0, t]), int(new_h[0, t]), int(new_k[0, t])
+                            )
+                    ovf2 = int(prob.overflow_units(used2))
+                else:
+                    used2, ovf2 = used, 0  # unbounded inventory never overflows
+                d_e = d_cost + lam * (ovf2 - ovf)
+            else:
+                d_cost = int(
+                    sa_step_deltas(
+                        old_w, old_h, new_w, new_h, modes=modes0,
+                        backend=backend, interpret=interpret,
+                    )[0]
+                )
+                d_e = d_cost
             # --- Metropolis: the uniform is drawn only for uphill moves
             if d_e > 0:
                 uphill_prop += 1
             if d_e < 0 or (temp > 0 and rng.random() < math.exp(-d_e / temp)):
                 if d_e > 0:
                     uphill_acc += 1
-                cost += d_e
+                cost += d_cost
+                if hetero:
+                    used, ovf = used2, ovf2
                 if tl:
                     sol.touch(*tl)
                     bins = sol.bins
                     if any(not bins[b] for b in tl):
                         sol.drop_empty()
                         sol.fill_geometry(chain_w[0], chain_h[0])
+                        if hetero:
+                            sol.fill_kinds(chain_k[0])
                     else:
                         chain_w[0, tl] = new_w[0, :k]
                         chain_h[0, tl] = new_h[0, :k]
+                        if hetero:
+                            chain_k[0, tl] = new_k[0, :k]
             else:
                 undo_swap_moves(sol, undo)
-            if cost < best_cost:
-                best, best_cost = sol.copy(), cost
-                trace.append((time.perf_counter() - t_start, best_cost))
+            if hetero:
+                improved = (cost - best_cost) + lam * (ovf - best_ovf) < 0
+            else:
+                improved = cost < best_cost
+            if improved:
+                best, best_cost, best_ovf = sol.copy(), cost, ovf
+                trace.append((time.perf_counter() - t_start,
+                              best_cost + lam * best_ovf if hetero else best_cost))
                 stale = 0
             else:
                 stale += 1
@@ -318,6 +421,12 @@ class SimulatedAnnealingPacker:
         n_moves = max(self.swap_moves, 1)
         width = 2 * n_moves
         interpret = backend == "pallas" and _default_jax_backend() != "tpu"
+        hetero = self._hetero
+        lam = self.inventory_penalty
+        pk = self.p_kind if hetero else 0.0
+        kt = prob.kind_tables if hetero else None
+        modes0 = prob.kind_tables[0][1]  # == BRAM18_MODES on default problems
+        n_kinds = prob.n_kinds
         t_start = time.perf_counter()
         master = np.random.default_rng(self.seed)
 
@@ -343,19 +452,34 @@ class SimulatedAnnealingPacker:
         items, counts = encode_chain_items(sols, cap)
         bw, bh, live = encode_chain_geometry(sols, items.shape[1])
         costs = np.asarray([s.cost() for s in sols], dtype=np.int64)
+        if hetero:
+            # per-chain RAM-kind lane + per-kind primitive usage (C, K)
+            bk = encode_chain_kinds(sols, items.shape[1])
+            UK = np.stack([s.used_primitives() for s in sols])
+            ovf_rows = prob.overflow_units
+            pcosts = costs + lam * ovf_rows(UK)
+        else:
+            bk = None
+            UK = None
+            pcosts = costs
 
         # buffer lookup tables with a zero/empty sentinel at index n
         widths_ext = np.append(prob.widths, 0)
         depths_ext = np.append(prob.depths, 0)
         layers_ext = np.append(prob.layers, -1)
 
-        best_costs = costs.copy()  # per-chain best (drives per-chain patience)
-        gi = int(np.argmin(costs))
+        best_pcosts = pcosts.copy()  # per-chain best (drives per-chain patience)
+        gi = int(np.argmin(pcosts))
+        gbest_pcost = pcosts[gi]
         gbest_cost = int(costs[gi])
         g_items = items[gi].copy()
         g_counts = counts[gi].copy()
         g_live = int(live[gi])
-        trace = [(time.perf_counter() - t_start, gbest_cost)]
+        g_kinds = bk[gi].copy() if hetero else None
+        g_UK = UK[gi].copy() if hetero else None
+        # hetero traces record the penalized cost (monotone); raw otherwise
+        trace = [(time.perf_counter() - t_start,
+                  float(gbest_pcost) if hetero else gbest_cost)]
         t0s = self._chain_t0s()
         ci = np.arange(n_chains)
         stale = np.zeros(n_chains, dtype=np.int64)
@@ -371,14 +495,36 @@ class SimulatedAnnealingPacker:
             active = stale < self.patience
             if not active.any():
                 break
-            # --- propose: one uniform block drives every chain's move sequence
-            u_all = master.random((n_moves, 4, n_chains))
+            # --- propose: one uniform block drives every chain's move
+            # sequence (two extra rows — kind-move gate and kind pick — only
+            # on heterogeneous problems, so the single-kind block and its
+            # trajectories are untouched)
+            u_all = master.random((n_moves, 6 if hetero else 4, n_chains))
+            if hetero:
+                bk_new = bk.copy()  # flips land here; commit is per-chain
             snaps = []
             for m in range(n_moves):
                 u = u_all[m]
                 src = np.minimum((u[0] * live).astype(np.int64), live - 1)
                 dst = np.minimum((u[1] * live).astype(np.int64), live - 1)
+                if hetero:
+                    # a chain does a RAM-kind flip of bin ``src`` this move
+                    # instead of a buffer swap
+                    kflip = active & (u[4] < pk)
+                    idxf = np.flatnonzero(kflip)
+                    if idxf.size:
+                        shift = 1 + np.minimum(
+                            (u[5, idxf] * (n_kinds - 1)).astype(np.int64),
+                            n_kinds - 2,
+                        )
+                        bk_new[idxf, src[idxf]] = (
+                            bk_new[idxf, src[idxf]] + shift
+                        ) % n_kinds
+                else:
+                    kflip = None
                 ok = active & (live >= 2) & (src != dst)
+                if hetero:
+                    ok &= ~kflip
                 cnt_s = counts[ci, src]
                 ok &= cnt_s > 0
                 item_k = np.minimum(
@@ -429,7 +575,9 @@ class SimulatedAnnealingPacker:
                     counts[idx, dst[idx]] += 1
                 tslots[:, 2 * m] = src
                 tslots[:, 2 * m + 1] = dst
-                entry_ok[:, 2 * m] = applied
+                # a kind flip touches only the src slot (geometry unchanged,
+                # kind lane differs); a swap touches both slots
+                entry_ok[:, 2 * m] = applied | kflip if hetero else applied
                 entry_ok[:, 2 * m + 1] = applied
             # a bin touched twice contributes one delta term (first entry wins)
             for a in range(1, width):
@@ -446,12 +594,37 @@ class SimulatedAnnealingPacker:
             ids = np.where(slot_items >= 0, slot_items, n)
             new_w = np.where(entry_ok, widths_ext[ids].max(-1), 0).astype(np.int32)
             new_h = np.where(entry_ok, depths_ext[ids].sum(-1), 0).astype(np.int32)
-            d_e = sa_step_deltas(
-                old_w, old_h, new_w, new_h, backend=backend, interpret=interpret
-            )
+            if hetero:
+                old_k = np.where(entry_ok, bk[rows, sel], 0).astype(np.int32)
+                new_k = np.where(entry_ok, bk_new[rows, sel], 0).astype(np.int32)
+                d_e = sa_step_deltas(
+                    old_w, old_h, new_w, new_h, backend=backend,
+                    interpret=interpret, old_k=old_k, new_k=new_k, kind_tables=kt,
+                )
+                if prob._any_bounded:
+                    # inventory-penalty delta, vectorized over all chains:
+                    # the per-kind primitive usage change of the touched slots
+                    po = prob.bin_primitives_many(old_w, old_h, old_k)
+                    pn = prob.bin_primitives_many(new_w, new_h, new_k)
+                    dUK = np.zeros((n_chains, n_kinds), dtype=np.int64)
+                    for kk in range(n_kinds):
+                        dUK[:, kk] = ((new_k == kk) * pn).sum(1) - (
+                            (old_k == kk) * po
+                        ).sum(1)
+                    pen = lam * (ovf_rows(UK + dUK) - ovf_rows(UK))
+                    d_tot = d_e + pen
+                else:
+                    dUK = None  # unbounded inventory never overflows
+                    d_tot = d_e
+            else:
+                d_e = sa_step_deltas(
+                    old_w, old_h, new_w, new_h, modes=modes0,
+                    backend=backend, interpret=interpret,
+                )
+                d_tot = d_e
             # --- Metropolis acceptance, batched
             temps = t0s / (1.0 + self.rc * it)
-            accept = metropolis_mask(d_e, temps, master.random(n_chains)) & active
+            accept = metropolis_mask(d_tot, temps, master.random(n_chains)) & active
             # --- roll back rejected chains (reverse move order)
             reject = ~accept
             for m in range(n_moves - 1, -1, -1):
@@ -471,25 +644,37 @@ class SimulatedAnnealingPacker:
                 cc = tslots.ravel()[flat]
                 bw[rr, cc] = new_w.ravel()[flat]
                 bh[rr, cc] = new_h.ravel()[flat]
-            uphill = active & (d_e > 0)
+            if hetero:
+                np.copyto(bk, bk_new, where=accept[:, None])
+                if dUK is not None:
+                    UK += dUK * accept[:, None]
+                pcosts = costs + lam * ovf_rows(UK)
+            else:
+                pcosts = costs
+            uphill = active & (d_tot > 0)
             uphill_prop += int(np.count_nonzero(uphill))
             uphill_acc += int(np.count_nonzero(uphill & accept))
             # --- per-chain best / patience bookkeeping
             steps += active
-            improved = active & (costs < best_costs)
-            best_costs = np.where(improved, costs, best_costs)
+            improved = active & (pcosts < best_pcosts)
+            best_pcosts = np.where(improved, pcosts, best_pcosts)
             stale = np.where(improved, 0, np.where(active, stale + 1, stale))
-            bi = int(np.argmin(costs))
-            if costs[bi] < gbest_cost:
+            bi = int(np.argmin(pcosts))
+            if pcosts[bi] < gbest_pcost:
+                gbest_pcost = pcosts[bi]
                 gbest_cost = int(costs[bi])
                 g_items[:] = items[bi]
                 g_counts[:] = counts[bi]
                 g_live = int(live[bi])
-                trace.append((time.perf_counter() - t_start, gbest_cost))
+                if hetero:
+                    g_kinds[:] = bk[bi]
+                    g_UK[:] = UK[bi]
+                trace.append((time.perf_counter() - t_start,
+                              float(gbest_pcost) if hetero else gbest_cost))
             # --- periodic best-chain exchange + live-window compaction
             if self.exchange_every > 0 and (it + 1) % self.exchange_every == 0:
-                worst = int(np.argmax(costs))
-                if costs[worst] > gbest_cost:
+                worst = int(np.argmax(pcosts))
+                if pcosts[worst] > gbest_pcost:
                     items[worst] = g_items
                     counts[worst] = g_counts
                     live[worst] = g_live
@@ -497,21 +682,34 @@ class SimulatedAnnealingPacker:
                     bw[worst] = widths_ext[ids].max(-1)
                     bh[worst] = depths_ext[ids].sum(-1)
                     costs[worst] = gbest_cost
-                    best_costs[worst] = min(int(best_costs[worst]), gbest_cost)
+                    if hetero:
+                        bk[worst] = g_kinds
+                        UK[worst] = g_UK
+                        pcosts = costs + lam * ovf_rows(UK)
+                        best_pcosts[worst] = min(best_pcosts[worst], gbest_pcost)
+                    else:
+                        best_pcosts[worst] = min(int(best_pcosts[worst]), gbest_cost)
                     stale[worst] = 0
                 order = np.argsort(counts == 0, axis=1, kind="stable")
                 items = np.take_along_axis(items, order[:, :, None], 1)
                 counts = np.take_along_axis(counts, order, 1)
                 bw = np.take_along_axis(bw, order, 1)
                 bh = np.take_along_axis(bh, order, 1)
+                if hetero:
+                    bk = np.take_along_axis(bk, order, 1)
                 live = (counts > 0).sum(1)
             it += 1
         wall = time.perf_counter() - t_start
         chains = [
-            decode_chain_items(prob, items[c], counts[c]) for c in range(n_chains)
+            decode_chain_items(
+                prob, items[c], counts[c], bk[c] if hetero else None
+            )
+            for c in range(n_chains)
         ]
-        gbest = decode_chain_items(prob, g_items, g_counts)
-        self.last_solution_ = chains[int(np.argmin(costs))]
+        gbest = decode_chain_items(
+            prob, g_items, g_counts, g_kinds if hetero else None
+        )
+        self.last_solution_ = chains[int(np.argmin(pcosts))]
         self.last_chains_ = chains
         return self._result(
             gbest, gbest_cost, wall, trace, int(steps.sum()), backend,
@@ -532,6 +730,10 @@ class SimulatedAnnealingPacker:
         if uphill is not None:
             params["exchange_every"] = self.exchange_every
             params["uphill_proposed"], params["uphill_accepted"] = uphill
+        if self._hetero:
+            params["p_kind"] = self.p_kind
+            params["inventory_penalty"] = self.inventory_penalty
+            params["overflow"] = best.inventory_overflow()
         algorithm = "SA-NFD" if self.perturbation == "nfd" else "SA-S"
         if params["n_chains"] > 1:
             algorithm += f"x{params['n_chains']}"

@@ -1,0 +1,6 @@
+from .kernel import (  # noqa: F401
+    binpack_fitness_kinds_pallas,
+    binpack_fitness_pallas,
+)
+from .ops import population_costs  # noqa: F401
+from .ref import binpack_fitness_kinds_ref, binpack_fitness_ref  # noqa: F401

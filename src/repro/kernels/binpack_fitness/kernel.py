@@ -31,6 +31,29 @@ def _fitness_kernel(w_ref, h_ref, cost_ref, *, modes):
     cost_ref[...] = jnp.where(w > 0, best, 0)
 
 
+def kind_cost_block(w, h, k, kind_tables):
+    """Per-kind lane-selected bin cost, shared by every heterogeneous kernel
+    body (fitness and SA delta): the kind count is tiny (2-4), so the
+    per-kind cost planes are computed unconditionally and lane-selected —
+    pure VPU work, no gather.  Empty slots (w == 0) cost nothing."""
+    out = jnp.zeros(w.shape, jnp.int32)
+    for ki, (weight, modes) in enumerate(kind_tables):
+        best = jnp.full(w.shape, jnp.iinfo(jnp.int32).max, jnp.int32)
+        for mw, md in modes:
+            c = ((w + (mw - 1)) // mw) * ((h + (md - 1)) // md)
+            best = jnp.minimum(best, c)
+        out = jnp.where(k == ki, best * jnp.int32(weight), out)
+    return jnp.where(w > 0, out, 0)
+
+
+def _fitness_kinds_kernel(w_ref, h_ref, k_ref, cost_ref, *, kind_tables):
+    """Heterogeneous variant: a kind-index plane selects, per bin, which
+    static mode table and unit weight apply."""
+    cost_ref[...] = kind_cost_block(
+        w_ref[...], h_ref[...], k_ref[...], kind_tables
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("modes", "interpret"))
 def binpack_fitness_pallas(
     widths: jax.Array,  # (P, NB) int32
@@ -56,4 +79,32 @@ def binpack_fitness_pallas(
         out_shape=jax.ShapeDtypeStruct((pp, nbp), jnp.int32),
         interpret=interpret,
     )(widths, heights)
+    return out[:p, :nb]
+
+
+@functools.partial(jax.jit, static_argnames=("kind_tables", "interpret"))
+def binpack_fitness_kinds_pallas(
+    widths: jax.Array,  # (P, NB) int32
+    heights: jax.Array,  # (P, NB) int32
+    kinds: jax.Array,  # (P, NB) int32 RAM-kind indices
+    kind_tables: tuple[tuple[int, tuple[tuple[int, int], ...]], ...],
+    interpret: bool = True,  # CPU host: validate via interpreter
+) -> jax.Array:
+    p, nb = widths.shape
+    pad_p = (-p) % POP_TILE
+    pad_b = (-nb) % 128
+    if pad_p or pad_b:
+        pad = ((0, pad_p), (0, pad_b))
+        widths = jnp.pad(widths, pad)
+        heights = jnp.pad(heights, pad)
+        kinds = jnp.pad(kinds, pad)  # kind 0 on w == 0 slots costs nothing
+    pp, nbp = widths.shape
+    out = pl.pallas_call(
+        functools.partial(_fitness_kinds_kernel, kind_tables=kind_tables),
+        grid=(pp // POP_TILE,),
+        in_specs=[pl.BlockSpec((POP_TILE, nbp), lambda i: (i, 0))] * 3,
+        out_specs=pl.BlockSpec((POP_TILE, nbp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((pp, nbp), jnp.int32),
+        interpret=interpret,
+    )(widths, heights, kinds)
     return out[:p, :nb]

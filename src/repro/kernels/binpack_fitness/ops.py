@@ -1,9 +1,13 @@
-"""Jit'd wrapper: per-individual total BRAM cost for a padded population.
+"""Jit'd wrapper: per-individual total RAM cost for a padded population.
 
 This is the GA's generation-evaluation primitive: rows are individuals,
 columns are bins, entries are the bin geometry; empty (padded) slots carry
 ``width == 0`` and cost nothing.  ``backend="auto"`` picks the Pallas kernel
 when a TPU is attached and the pure-jnp reference otherwise.
+
+Heterogeneous OCM problems pass a parallel ``kinds`` matrix plus the
+problem's precomputed ``kind_tables`` (``((weight, modes), ...)`` per RAM
+kind); the homogeneous call signature and its jit cache are untouched.
 """
 from __future__ import annotations
 
@@ -14,8 +18,8 @@ import jax.numpy as jnp
 
 from repro.core.problem import BRAM18_MODES
 
-from .kernel import binpack_fitness_pallas
-from .ref import binpack_fitness_ref
+from .kernel import binpack_fitness_kinds_pallas, binpack_fitness_pallas
+from .ref import binpack_fitness_kinds_ref, binpack_fitness_ref
 
 
 @functools.partial(jax.jit, static_argnames=("modes",))
@@ -23,15 +27,47 @@ def _ref_totals(widths, heights, modes):
     return jnp.sum(binpack_fitness_ref(widths, heights, modes), axis=1)
 
 
+@functools.partial(jax.jit, static_argnames=("kind_tables",))
+def _ref_totals_kinds(widths, heights, kinds, kind_tables):
+    return jnp.sum(
+        binpack_fitness_kinds_ref(widths, heights, kinds, kind_tables), axis=1
+    )
+
+
 def population_costs(
-    widths, heights, modes=BRAM18_MODES, backend: str = "pallas", interpret=True
+    widths,
+    heights,
+    modes=BRAM18_MODES,
+    backend: str = "pallas",
+    interpret=True,
+    kinds=None,
+    kind_tables=None,
 ):
-    """(P, NB) geometry -> (P,) total cost per individual."""
+    """(P, NB) geometry -> (P,) total cost per individual.
+
+    ``kinds`` (a (P, NB) int matrix of RAM-kind indices) together with
+    ``kind_tables`` routes evaluation through per-kind mode tables; without
+    them the single mode set ``modes`` applies to every bin.
+    """
     if backend == "auto":
         if jax.default_backend() == "tpu":
             backend, interpret = "pallas", False
         else:
             backend = "ref"
+    if kinds is not None:
+        if kind_tables is None:
+            raise ValueError("kinds requires kind_tables")
+        kind_tables = tuple((int(w), tuple(m)) for w, m in kind_tables)
+        if backend == "pallas":
+            per_bin = binpack_fitness_kinds_pallas(
+                widths, heights, kinds, kind_tables, interpret
+            )
+            return jnp.sum(per_bin, axis=1)
+        if backend != "ref":
+            raise ValueError(
+                f"unknown backend {backend!r}; options: auto, pallas, ref"
+            )
+        return _ref_totals_kinds(widths, heights, kinds, kind_tables)
     if backend == "pallas":
         per_bin = binpack_fitness_pallas(widths, heights, tuple(modes), interpret)
         return jnp.sum(per_bin, axis=1)

@@ -15,3 +15,18 @@ def binpack_fitness_ref(
     ]
     best = jnp.min(jnp.stack(costs), axis=0).astype(jnp.int32)
     return jnp.where(widths > 0, best, 0)
+
+
+def binpack_fitness_kinds_ref(
+    widths: jax.Array,
+    heights: jax.Array,
+    kinds: jax.Array,
+    kind_tables: tuple[tuple[int, tuple[tuple[int, int], ...]], ...],
+) -> jax.Array:
+    """Heterogeneous variant: per-bin RAM-kind indices select the mode table
+    and the unit weight (``kind_tables[k] = (weight, modes)``)."""
+    out = jnp.zeros(widths.shape, dtype=jnp.int32)
+    for k, (weight, modes) in enumerate(kind_tables):
+        ck = binpack_fitness_ref(widths, heights, modes) * jnp.int32(weight)
+        out = jnp.where(kinds == k, ck, out)
+    return out

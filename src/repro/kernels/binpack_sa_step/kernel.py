@@ -23,6 +23,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# the per-kind cost block is shared with the fitness kernel so the two
+# Pallas bodies can never drift apart arithmetically
+from repro.kernels.binpack_fitness.kernel import kind_cost_block
+
 CHAIN_TILE = 8  # chain rows per program (sublane tile for int32)
 
 
@@ -65,4 +69,45 @@ def sa_step_deltas_pallas(
         out_shape=jax.ShapeDtypeStruct((cp, 1), jnp.int32),
         interpret=interpret,
     )(old_w, old_h, new_w, new_h)
+    return out[:c, 0]
+
+
+def _sa_step_kinds_kernel(
+    ow_ref, oh_ref, ok_ref, nw_ref, nh_ref, nk_ref, d_ref, *, kind_tables
+):
+    delta = kind_cost_block(
+        nw_ref[...], nh_ref[...], nk_ref[...], kind_tables
+    ) - kind_cost_block(ow_ref[...], oh_ref[...], ok_ref[...], kind_tables)
+    d_ref[...] = jnp.sum(delta, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("kind_tables", "interpret"))
+def sa_step_deltas_kinds_pallas(
+    old_w: jax.Array,  # (C, T) int32
+    old_h: jax.Array,
+    old_k: jax.Array,  # (C, T) int32 RAM-kind indices
+    new_w: jax.Array,
+    new_h: jax.Array,
+    new_k: jax.Array,
+    kind_tables: tuple[tuple[int, tuple[tuple[int, int], ...]], ...],
+    interpret: bool = True,  # CPU host: validate via interpreter
+) -> jax.Array:
+    """Heterogeneous fused delta step: per-slot kind lanes select the mode
+    table and unit weight (same tiling as the homogeneous kernel)."""
+    c, t = old_w.shape
+    pad_c = (-c) % CHAIN_TILE
+    pad_t = (-t) % 128
+    args = (old_w, old_h, old_k, new_w, new_h, new_k)
+    if pad_c or pad_t:
+        pad = ((0, pad_c), (0, pad_t))
+        args = tuple(jnp.pad(x, pad) for x in args)
+    cp, tp = args[0].shape
+    out = pl.pallas_call(
+        functools.partial(_sa_step_kinds_kernel, kind_tables=kind_tables),
+        grid=(cp // CHAIN_TILE,),
+        in_specs=[pl.BlockSpec((CHAIN_TILE, tp), lambda i: (i, 0))] * 6,
+        out_specs=pl.BlockSpec((CHAIN_TILE, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((cp, 1), jnp.int32),
+        interpret=interpret,
+    )(*args)
     return out[:c, 0]

@@ -40,6 +40,15 @@ def _bin_costs_numpy(w: np.ndarray, h: np.ndarray, modes) -> np.ndarray:
     return np.where(w[..., 0] > 0, np.min(per_mode, axis=-1), 0)
 
 
+def _bin_costs_kinds_numpy(w, h, k, kind_tables) -> np.ndarray:
+    """Per-slot unit cost with a RAM-kind lane selecting the mode table."""
+    k = np.asarray(k)
+    out = np.zeros(np.asarray(w).shape, dtype=np.int64)
+    for ki, (weight, modes) in enumerate(kind_tables):
+        out = np.where(k == ki, _bin_costs_numpy(w, h, modes) * int(weight), out)
+    return out
+
+
 def sa_step_deltas(
     old_w,
     old_h,
@@ -48,34 +57,64 @@ def sa_step_deltas(
     modes=BRAM18_MODES,
     backend: str = "auto",
     interpret: bool = True,
+    old_k=None,
+    new_k=None,
+    kind_tables=None,
 ) -> np.ndarray:
     """(C, T) touched-bin geometry before/after -> (C,) int64 cost deltas.
 
     Empty slots (w == 0) cost nothing on either side, so rows may be
-    zero-padded to a common touched-bin count.
+    zero-padded to a common touched-bin count.  Heterogeneous problems pass
+    per-slot RAM-kind lanes ``old_k``/``new_k`` plus the problem's
+    ``kind_tables`` (``(weight, modes)`` per kind): each slot is then costed
+    on its own mode table, so a kind flip (same geometry, different kind) is
+    just another delta.  All backends stay exact-integer and bit-identical.
     """
     if backend == "auto":
         backend, interpret = resolve_auto()
+    hetero = old_k is not None
+    if hetero:
+        if new_k is None or kind_tables is None:
+            raise ValueError("old_k/new_k/kind_tables must be passed together")
+        kind_tables = tuple((int(w), tuple(m)) for w, m in kind_tables)
     if backend == "python":
-        new_c = _bin_costs_numpy(new_w, new_h, modes)
-        old_c = _bin_costs_numpy(old_w, old_h, modes)
+        if hetero:
+            new_c = _bin_costs_kinds_numpy(new_w, new_h, new_k, kind_tables)
+            old_c = _bin_costs_kinds_numpy(old_w, old_h, old_k, kind_tables)
+        else:
+            new_c = _bin_costs_numpy(new_w, new_h, modes)
+            old_c = _bin_costs_numpy(old_w, old_h, modes)
         return np.sum(new_c - old_c, axis=-1)
     import jax.numpy as jnp
 
     if backend == "ref":
-        from .ref import sa_step_deltas_ref
-
-        out = _jit_ref()(
-            jnp.asarray(old_w), jnp.asarray(old_h),
-            jnp.asarray(new_w), jnp.asarray(new_h), tuple(modes),
-        )
+        if hetero:
+            out = _jit_ref_kinds()(
+                jnp.asarray(old_w), jnp.asarray(old_h), jnp.asarray(old_k),
+                jnp.asarray(new_w), jnp.asarray(new_h), jnp.asarray(new_k),
+                kind_tables,
+            )
+        else:
+            out = _jit_ref()(
+                jnp.asarray(old_w), jnp.asarray(old_h),
+                jnp.asarray(new_w), jnp.asarray(new_h), tuple(modes),
+            )
     elif backend == "pallas":
-        from .kernel import sa_step_deltas_pallas
+        if hetero:
+            from .kernel import sa_step_deltas_kinds_pallas
 
-        out = sa_step_deltas_pallas(
-            jnp.asarray(old_w), jnp.asarray(old_h),
-            jnp.asarray(new_w), jnp.asarray(new_h), tuple(modes), interpret,
-        )
+            out = sa_step_deltas_kinds_pallas(
+                jnp.asarray(old_w), jnp.asarray(old_h), jnp.asarray(old_k),
+                jnp.asarray(new_w), jnp.asarray(new_h), jnp.asarray(new_k),
+                kind_tables, interpret,
+            )
+        else:
+            from .kernel import sa_step_deltas_pallas
+
+            out = sa_step_deltas_pallas(
+                jnp.asarray(old_w), jnp.asarray(old_h),
+                jnp.asarray(new_w), jnp.asarray(new_h), tuple(modes), interpret,
+            )
     else:
         raise ValueError(f"unknown backend {backend!r}; options: {BACKENDS}")
     return np.asarray(out, dtype=np.int64)
@@ -96,6 +135,7 @@ def metropolis_mask(d_e, temps, u) -> np.ndarray:
 
 
 _REF_JIT = None
+_REF_KINDS_JIT = None
 
 
 def _jit_ref():
@@ -111,6 +151,21 @@ def _jit_ref():
             sa_step_deltas_ref
         )
     return _REF_JIT
+
+
+def _jit_ref_kinds():
+    global _REF_KINDS_JIT
+    if _REF_KINDS_JIT is None:
+        import functools
+
+        import jax
+
+        from .ref import sa_step_deltas_kinds_ref
+
+        _REF_KINDS_JIT = functools.partial(
+            jax.jit, static_argnames=("kind_tables",)
+        )(sa_step_deltas_kinds_ref)
+    return _REF_KINDS_JIT
 
 
 def resolve_auto() -> tuple[str, bool]:

@@ -8,7 +8,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.binpack_fitness.ref import binpack_fitness_ref
+from repro.kernels.binpack_fitness.ref import (
+    binpack_fitness_kinds_ref,
+    binpack_fitness_ref,
+)
 
 
 def sa_step_deltas_ref(
@@ -21,4 +24,20 @@ def sa_step_deltas_ref(
     """(C,) int32 total BRAM-cost delta per chain."""
     new_cost = binpack_fitness_ref(new_w, new_h, modes)
     old_cost = binpack_fitness_ref(old_w, old_h, modes)
+    return jnp.sum(new_cost - old_cost, axis=1)
+
+
+def sa_step_deltas_kinds_ref(
+    old_w: jax.Array,
+    old_h: jax.Array,
+    old_k: jax.Array,  # (C, T) int32 RAM-kind indices before the move
+    new_w: jax.Array,
+    new_h: jax.Array,
+    new_k: jax.Array,  # (C, T) int32 RAM-kind indices after the move
+    kind_tables: tuple[tuple[int, tuple[tuple[int, int], ...]], ...],
+) -> jax.Array:
+    """Heterogeneous variant: kind lanes select per-bin mode tables/weights
+    (a RAM-kind flip is a delta with equal geometry and different kinds)."""
+    new_cost = binpack_fitness_kinds_ref(new_w, new_h, new_k, kind_tables)
+    old_cost = binpack_fitness_kinds_ref(old_w, old_h, old_k, kind_tables)
     return jnp.sum(new_cost - old_cost, axis=1)

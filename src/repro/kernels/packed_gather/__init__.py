@@ -1,0 +1,3 @@
+from .kernel import packed_gather_matvec  # noqa: F401
+from .ops import bank_matvec, split_outputs  # noqa: F401
+from .ref import packed_gather_ref  # noqa: F401

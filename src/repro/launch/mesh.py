@@ -7,8 +7,9 @@ never touches jax device state.  The single-pod mesh is 16x16 = 256 chips
 gradient all-reduces become (pod-local reduce-scatter, cross-pod all-reduce,
 pod-local all-gather) under XLA's 2-D reduction lowering, the DCN-friendly
 pattern.  A "pipe" axis for pipeline stages can be added here without any
-model-code change (stage = slice of the scanned layer axis); see DESIGN.md
-section 5 for why the deployed configuration uses pod-DP instead.
+model-code change (stage = slice of the scanned layer axis); see
+docs/DESIGN.md section 5 for why the deployed configuration uses pod-DP
+instead.
 """
 from __future__ import annotations
 

@@ -82,6 +82,61 @@ def test_same_width_stack_subadditive_per_mode(w, h1, h2):
         assert stacked_cost <= per_mode
 
 
+@st.composite
+def kind_tables_strategy(draw):
+    """1-3 RAM kinds, each with a random mode set and an integer weight."""
+    n_kinds = draw(st.integers(1, 3))
+    tables = []
+    for _ in range(n_kinds):
+        n_modes = draw(st.integers(1, 6))
+        modes = tuple(
+            (draw(st.integers(1, 96)), draw(st.integers(1, 40_000)))
+            for _ in range(n_modes)
+        )
+        tables.append((draw(st.integers(1, 32)), modes))
+    return tuple(tables)
+
+
+@settings(max_examples=30, deadline=None)
+@given(kind_tables_strategy(), st.integers(0, 10_000))
+def test_random_mode_sets_backends_agree(kind_tables, seed):
+    """python/ref/pallas(interpret)/legacy cost evaluators agree on *random*
+    RAM mode sets (not just BRAM18), including weights and empty slots."""
+    import jax.numpy as jnp
+
+    from repro.kernels.binpack_fitness.kernel import binpack_fitness_kinds_pallas
+    from repro.kernels.binpack_fitness.ref import binpack_fitness_kinds_ref
+    from repro.kernels.binpack_sa_step.ops import _bin_costs_kinds_numpy
+
+    rng = np.random.default_rng(seed)
+    p, nb = int(rng.integers(1, 5)), int(rng.integers(1, 40))
+    w = rng.integers(0, 100, (p, nb)).astype(np.int32)
+    h = np.where(w > 0, rng.integers(1, 60_000, (p, nb)), 0).astype(np.int32)
+    k = rng.integers(0, len(kind_tables), (p, nb)).astype(np.int32)
+    # legacy: scalar min-over-modes loop, the seed's formulation
+    legacy = np.zeros((p, nb), dtype=np.int64)
+    for i in range(p):
+        for j in range(nb):
+            if w[i, j] > 0:
+                weight, modes = kind_tables[int(k[i, j])]
+                legacy[i, j] = weight * min(
+                    -(-int(w[i, j]) // mw) * -(-int(h[i, j]) // md)
+                    for mw, md in modes
+                )
+    python = _bin_costs_kinds_numpy(w, h, k, kind_tables)
+    ref = np.asarray(
+        binpack_fitness_kinds_ref(jnp.asarray(w), jnp.asarray(h),
+                                  jnp.asarray(k), kind_tables)
+    )
+    pallas = np.asarray(
+        binpack_fitness_kinds_pallas(jnp.asarray(w), jnp.asarray(h),
+                                     jnp.asarray(k), kind_tables, True)
+    )
+    np.testing.assert_array_equal(python, legacy)
+    np.testing.assert_array_equal(ref, legacy)
+    np.testing.assert_array_equal(pallas, legacy)
+
+
 @settings(max_examples=25, deadline=None)
 @given(st.lists(st.integers(8, 512), min_size=1, max_size=60), st.integers(1, 8))
 def test_sequence_packing_invariants(doc_lengths, card):

@@ -62,6 +62,92 @@ def test_sa_step_deltas_backends_agree(c, t, rng):
     assert np.array_equal(py, direct)
 
 
+def _random_kind_tables(rng):
+    tables = []
+    for _ in range(int(rng.integers(1, 4))):
+        modes = tuple(
+            (int(rng.integers(1, 96)), int(rng.integers(1, 40_000)))
+            for _ in range(int(rng.integers(1, 6)))
+        )
+        tables.append((int(rng.integers(1, 32)), modes))
+    return tuple(tables)
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_random_mode_sets_backends_agree(seed):
+    """Seeded random-RAM-mode-set sweep (no hypothesis dependency): the
+    numpy, jnp-ref, and Pallas per-kind cost evaluators must all equal the
+    scalar min-over-modes formulation for arbitrary mode tables/weights."""
+    from repro.kernels.binpack_fitness.kernel import binpack_fitness_kinds_pallas
+    from repro.kernels.binpack_fitness.ref import binpack_fitness_kinds_ref
+    from repro.kernels.binpack_sa_step.ops import _bin_costs_kinds_numpy
+
+    rng = np.random.default_rng(seed)
+    kind_tables = _random_kind_tables(rng)
+    p, nb = int(rng.integers(1, 6)), int(rng.integers(1, 150))
+    w = rng.integers(0, 100, (p, nb)).astype(np.int32)
+    h = np.where(w > 0, rng.integers(1, 60_000, (p, nb)), 0).astype(np.int32)
+    k = rng.integers(0, len(kind_tables), (p, nb)).astype(np.int32)
+    legacy = np.zeros((p, nb), dtype=np.int64)
+    for i in range(p):
+        for j in range(nb):
+            if w[i, j] > 0:
+                weight, modes = kind_tables[int(k[i, j])]
+                legacy[i, j] = weight * min(
+                    -(-int(w[i, j]) // mw) * -(-int(h[i, j]) // md)
+                    for mw, md in modes
+                )
+    python = _bin_costs_kinds_numpy(w, h, k, kind_tables)
+    ref = np.asarray(
+        binpack_fitness_kinds_ref(
+            jnp.asarray(w), jnp.asarray(h), jnp.asarray(k), kind_tables
+        )
+    )
+    pallas = np.asarray(
+        binpack_fitness_kinds_pallas(
+            jnp.asarray(w), jnp.asarray(h), jnp.asarray(k), kind_tables, True
+        )
+    )
+    np.testing.assert_array_equal(python, legacy)
+    np.testing.assert_array_equal(ref, legacy)
+    np.testing.assert_array_equal(pallas, legacy)
+
+
+@pytest.mark.parametrize("c,t", [(1, 1), (3, 4), (9, 130)])
+def test_sa_step_deltas_kinds_backends_agree(c, t, rng):
+    """Kind-lane SA deltas: python/ref/pallas agree and equal the direct
+    per-kind cost difference (kind flips = same geometry, different kind)."""
+    from repro.core.problem import BRAM18, URAM288
+    from repro.kernels.binpack_fitness.ref import binpack_fitness_kinds_ref
+
+    kind_tables = ((1, BRAM18.modes), (16, URAM288.modes))
+    ow = rng.integers(0, 80, (c, t)).astype(np.int32)
+    ow[rng.random((c, t)) < 0.3] = 0
+    oh = np.where(ow > 0, rng.integers(1, 70_000, (c, t)), 0).astype(np.int32)
+    ok = rng.integers(0, 2, (c, t)).astype(np.int32)
+    nw = ow.copy()  # kind flips: geometry fixed, kinds flipped for half
+    nh = oh.copy()
+    nk = np.where(rng.random((c, t)) < 0.5, 1 - ok, ok).astype(np.int32)
+    py = sa_step_deltas(ow, oh, nw, nh, backend="python",
+                        old_k=ok, new_k=nk, kind_tables=kind_tables)
+    rf = sa_step_deltas(ow, oh, nw, nh, backend="ref",
+                        old_k=ok, new_k=nk, kind_tables=kind_tables)
+    pa = sa_step_deltas(ow, oh, nw, nh, backend="pallas",
+                        old_k=ok, new_k=nk, kind_tables=kind_tables)
+    assert np.array_equal(py, rf)
+    assert np.array_equal(py, pa)
+    direct = np.asarray(
+        binpack_fitness_kinds_ref(
+            jnp.asarray(nw), jnp.asarray(nh), jnp.asarray(nk), kind_tables
+        )
+    ).sum(1) - np.asarray(
+        binpack_fitness_kinds_ref(
+            jnp.asarray(ow), jnp.asarray(oh), jnp.asarray(ok), kind_tables
+        )
+    ).sum(1)
+    assert np.array_equal(py, direct)
+
+
 def test_metropolis_mask_edge_cases():
     d = np.array([-5.0, 0.0, 2.0, 2.0, 1.0])
     t = np.array([0.0, 1.0, 1e12, 1e-12, 0.0])
