@@ -14,12 +14,13 @@ import time
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="engine|hetero|sa|table3|table4|fig45|tpu|seqpack|"
-                         "kernels|roofline")
+                    help="engine|hetero|sa|dse|table3|table4|fig45|tpu|"
+                         "seqpack|kernels|roofline")
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args(argv)
 
     from . import (
+        bench_dse,
         bench_engine,
         bench_fig45,
         bench_kernels,
@@ -41,6 +42,7 @@ def main(argv=None) -> None:
         ),
         "hetero": lambda: bench_engine.run_hetero(quick=args.quick),
         "sa": lambda: bench_engine.run_sa(quick=args.quick),
+        "dse": lambda: bench_dse.run(quick=args.quick),
         "table3": lambda: bench_table3.run(accelerators=small, budgets=budgets),
         "table4": lambda: bench_table4.run(accelerators=small, budgets=budgets),
         "fig45": lambda: bench_fig45.run(budget_s=8 if args.quick else 25),

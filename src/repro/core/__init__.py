@@ -17,7 +17,8 @@ from .accelerators import (  # noqa: F401
     get_problem,
     hyperparams,
 )
-from .api import ALGORITHMS, make_packer, pack  # noqa: F401
+from .api import ALGORITHMS, make_packer, pack, pack_sweep  # noqa: F401
+from .dse import SweepResult  # noqa: F401
 from .ga import GeneticPacker, buffer_swap, kind_reassign  # noqa: F401
 from .nfd import nfd_from_scratch, nfd_pack_order, nfd_repack  # noqa: F401
 from .portfolio import IslandSpec, pack_portfolio  # noqa: F401
@@ -32,11 +33,15 @@ from .problem import (  # noqa: F401
     OCMInventory,
     PackingProblem,
     PackingResult,
+    ProblemBatch,
     RAM_KINDS,
     RAMKind,
     Solution,
     URAM288,
+    batch_group_key,
     buffers_from_shape_rows,
+    decode_problem_batch,
+    encode_problem_batch,
     greedy_assign_kinds,
     register_ram_kind,
 )

@@ -6,6 +6,7 @@ import time
 import numpy as np
 
 from . import baselines
+from .dse import SweepResult, pack_sweep  # noqa: F401  (re-export)
 from .ga import GeneticPacker
 from .problem import PackingProblem, PackingResult, Solution
 from .sa import SimulatedAnnealingPacker
@@ -31,7 +32,29 @@ def make_packer(
     backend: str = "auto",
     **hyper,
 ):
-    """Build a GA/SA packer from the paper's Table 2 hyperparameter names."""
+    """Build a GA/SA packer from the paper's Table 2 hyperparameter names.
+
+    Only the four evolutionary algorithms (``ga-nfd``/``ga-s``/``sa-nfd``/
+    ``sa-s``) have packer objects; the one-shot heuristics are functions
+    reached through :func:`pack`.  Keyword arguments:
+
+    * ``seed`` — RNG seed; every engine/backend is deterministic per seed.
+    * ``max_seconds`` — wall-clock budget; pair with the ``max_iterations``
+      (SA) / ``max_generations`` (GA) hyperparameters for reproducible,
+      budget-independent runs.
+    * ``intra_layer`` — enforce the paper's intra-layer packing scenario
+      (a bin never mixes buffers from different layers).
+    * ``backend`` — evaluation engine: ``auto`` (Pallas on TPU, host
+      evaluation on CPU), ``python`` (incremental scalar), ``ref`` (jit'd
+      jnp), ``pallas`` (interpreter off-TPU), ``legacy`` (the seed's
+      from-scratch scalar loop, kept for benchmarking).  All backends are
+      bit-identical per seed.
+    * ``hyper`` — Table-2 names (``n_pop``, ``n_tour``, ``p_mut``,
+      ``p_adm_w``, ``p_adm_h``, ``sa_t0``, ``sa_rc``) plus the engine
+      extensions (``n_chains``, ``exchange_every``, ``ladder_min/max``,
+      ``patience``, ``swap_moves``, ``p_kind``, ``inventory_penalty``,
+      ``max_iterations``, ``max_generations``).
+    """
     algorithm = algorithm.lower()
     if algorithm in ("ga-nfd", "ga-s"):
         return GeneticPacker(
@@ -47,6 +70,7 @@ def make_packer(
             layer_weight=hyper.get("layer_weight", 0.01),
             intra_layer=intra_layer,
             max_seconds=max_seconds,
+            max_generations=hyper.get("max_generations", 100_000),
             patience=hyper.get("patience", 200),
             seed=seed,
             backend=backend,
@@ -66,6 +90,7 @@ def make_packer(
             swap_moves=hyper.get("swap_moves", 2),
             intra_layer=intra_layer,
             max_seconds=max_seconds,
+            max_iterations=hyper.get("max_iterations", 2_000_000),
             patience=hyper.get("patience", 20_000),
             seed=seed,
             n_chains=hyper.get("n_chains", 1),
@@ -91,19 +116,26 @@ def pack(
     """Pack `prob` with the named algorithm and return a PackingResult.
 
     Accepts the paper's Table 2 hyperparameter names: n_pop, n_tour, p_mut,
-    p_adm_w, p_adm_h, sa_t0, sa_rc.  ``backend`` selects the evaluation
-    engine — "auto", "python", "ref", "pallas", or "legacy" (the seed's
-    scalar loop, kept for benchmarking) — all bit-identical for a fixed
-    seed.  For the GA the backends batch generation fitness; for "sa-s"
-    they select the multi-chain annealer (pass ``n_chains=K`` to run K
-    temperature-laddered chains through the fused delta-cost kernel;
-    "sa-nfd" always runs the scalar loop).
+    p_adm_w, p_adm_h, sa_t0, sa_rc (see :func:`make_packer` for the full
+    kwarg reference, including budgets).  ``intra_layer=True`` enforces
+    the paper's intra-layer packing scenario.  ``backend`` selects the
+    evaluation engine — "auto", "python", "ref", "pallas", or "legacy"
+    (the seed's scalar loop, kept for benchmarking) — all bit-identical
+    for a fixed seed.  For the GA the backends batch generation fitness;
+    for "sa-s" they select the multi-chain annealer (pass ``n_chains=K``
+    to run K temperature-laddered chains through the fused delta-cost
+    kernel; "sa-nfd" always runs the scalar loop).
 
     On heterogeneous problems (``PackingProblem(ocm=...)`` — e.g.
-    ``get_problem("RN152-W1A2", device="U50")``) every engine additionally
-    explores per-bin RAM-kind reassignment (``p_kind``) and penalizes
-    inventory overflow (``inventory_penalty`` per unit); single-kind
-    problems are bit-identical to previous releases.
+    ``get_problem("RN152-W1A2", device="U50")``, with ``device`` naming an
+    ``OCM_DEVICES`` inventory) every engine additionally explores per-bin
+    RAM-kind reassignment (``p_kind``) and penalizes inventory overflow
+    (``inventory_penalty`` per unit); single-kind problems are
+    bit-identical to previous releases.
+
+    To score many problems at once — the DSE use-case — see
+    :func:`pack_sweep`, which batches a whole fleet through the vectorized
+    engines with per-problem bit-parity to this function.
     """
     algorithm = algorithm.lower()
     if algorithm in ("ga-nfd", "ga-s", "sa-nfd", "sa-s"):

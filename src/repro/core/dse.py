@@ -1,0 +1,369 @@
+"""Cross-problem batched DSE solver: pack a *fleet* of problems in one run.
+
+The paper's motivating use-case (section 2.3) is memory packing inside a
+design-space-exploration inner loop: every (network x folding x device x
+precision) candidate needs a packed OCM estimate, and sweeps span hundreds
+of candidates per accelerator build (the authors' sequel, arXiv:2011.07317).
+Solving candidates one at a time leaves the batched kernels — which already
+vectorize over chains and populations *within* one problem — idle across
+the problem axis.  :func:`pack_sweep` closes that gap:
+
+* Candidates are deduplicated by :meth:`PackingProblem.fingerprint` (and
+  optionally served from a caller-owned ``cache`` dict), so repeated DSE
+  candidates are free.
+* The remaining fleet is grouped by cost-model signature
+  (:func:`problem.batch_group_key`) and each group is padded to a common
+  ``(NB, max_items)`` envelope (:func:`problem.encode_problem_batch`).
+* ``sa-s`` groups run the multi-problem chain-block annealer
+  (`SimulatedAnnealingPacker._anneal_block`): P problems x C chains advance
+  in lock-step as one ``(P*C, ...)`` array program, with per-problem
+  temperature ladders, best tracking, and early-exit freezing of converged
+  problems.  Each problem consumes its own RNG stream, so its result is
+  **bit-identical** to a standalone ``pack(prob, "sa-s", n_chains=C,
+  seed=...)`` run — batching buys throughput, never different answers.
+* ``ga-nfd``/``ga-s`` groups run a *lockstep* driver over the GA's phase
+  helpers: mutations stay per-problem Python, but every generation's
+  population fitness is evaluated in ONE leading-problem-axis
+  ``binpack_fitness`` call over the stacked ``(P, n_pop, NB)`` matrices.
+  Again bit-identical per problem to standalone runs.
+* Everything else (``sa-nfd``, single-chain SA, ``legacy`` backends, the
+  one-shot heuristics, ``portfolio``) falls back to a serial per-problem
+  loop through :func:`api.pack` — same results, no batching.
+
+Budget semantics: ``max_seconds`` is the wall-clock budget of one engine
+*invocation* — a batched group shares one clock (its problems advance
+together), the serial lane spends it per problem.  For reproducible,
+parity-testable sweeps prefer iteration budgets (``max_iterations`` /
+``max_generations`` with a huge ``max_seconds``), which freeze each problem
+at exactly the same trajectory point as its standalone run.
+
+Axes, padding, and masking contracts: docs/DESIGN.md section 10; the
+paper-concept-to-code map lives in docs/ALGORITHMS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import numpy as np
+
+from .ga import GeneticPacker
+from .problem import (
+    PackingProblem,
+    PackingResult,
+    batch_group_key,
+)
+
+# algorithms whose batched lane exists (everything else runs serially)
+_SA_BATCHED = ("sa-s",)
+_GA_LOCKSTEP = ("ga-nfd", "ga-s")
+
+
+# --------------------------------------------------------------- sweep result
+@dataclasses.dataclass
+class SweepResult:
+    """Outcome of one :func:`pack_sweep` call.
+
+    ``results[i]`` is the :class:`PackingResult` of ``problems[i]`` —
+    positions with equal task fingerprints share one result object.
+    ``fresh`` holds the positions that were actually solved this call (the
+    rest came from the fingerprint dedup or the caller's ``cache``).
+    """
+
+    results: list[PackingResult]
+    problems: list[PackingProblem]
+    wall_time_s: float
+    n_solved: int
+    cache_hits: int
+    n_groups: int
+    algorithm: str
+    fresh: tuple[int, ...] = ()
+
+    @property
+    def size(self) -> int:
+        return len(self.results)
+
+    @property
+    def candidates_per_sec(self) -> float:
+        """Aggregate DSE throughput: candidates scored per wall second."""
+        return self.size / max(self.wall_time_s, 1e-9)
+
+    def costs(self) -> np.ndarray:
+        return np.asarray([r.cost for r in self.results], dtype=np.int64)
+
+    def pareto_indices(self) -> list[int]:
+        """Non-dominated candidates over (cost down, Eq.-1 efficiency up).
+
+        Across a sweep of *different* workloads this is the standard DSE
+        screen: a candidate survives unless another candidate stores its
+        bits at least as efficiently in no more RAM.  Callers with a real
+        throughput model should build their own front from ``results``.
+        """
+        cost = self.costs()
+        eff = np.asarray([r.efficiency for r in self.results])
+        out = []
+        for i in range(self.size):
+            dominated = np.any(
+                (cost <= cost[i]) & (eff >= eff[i])
+                & ((cost < cost[i]) | (eff > eff[i]))
+            )
+            if not dominated:
+                out.append(i)
+        return out
+
+    def table(self) -> str:
+        """Efficiency/Pareto report, one row per candidate."""
+        pareto = set(self.pareto_indices())
+        fresh = set(self.fresh)
+        lines = [
+            f"{'#':>3} {'candidate':<24} {'bufs':>5} {'baseline':>9} "
+            f"{'packed':>7} {'dBRAM':>6} {'eff%':>6} {'ovf':>5} {'src':>6} "
+            f"{'pareto':>6}"
+        ]
+        for i, (prob, r) in enumerate(zip(self.problems, self.results)):
+            ovf = r.solution.inventory_overflow()
+            lines.append(
+                f"{i:>3} {prob.name[:24]:<24} {prob.n:>5} "
+                f"{prob.baseline_cost():>9} {r.cost:>7} "
+                f"{r.baseline_cost / max(r.cost, 1):>6.2f} "
+                f"{r.efficiency * 100:>6.1f} {ovf:>5} "
+                f"{'solve' if i in fresh else 'cache':>6} "
+                f"{'*' if i in pareto else '':>6}"
+            )
+        lines.append(self.summary())
+        return "\n".join(lines)
+
+    def summary(self) -> str:
+        return (
+            f"sweep[{self.algorithm}]: {self.size} candidates in "
+            f"{self.wall_time_s:.2f}s ({self.candidates_per_sec:.2f}/s), "
+            f"{self.n_solved} solved fresh in {self.n_groups} group(s), "
+            f"{self.cache_hits} served from dedup/cache"
+        )
+
+
+def _task_keys(problems, algorithm, seeds, intra_layer, backend,
+               max_seconds, hyper) -> list[tuple]:
+    hkey = tuple(sorted((k, repr(v)) for k, v in hyper.items()))
+    return [
+        (prob.fingerprint(), algorithm, int(s), bool(intra_layer), backend,
+         float(max_seconds), hkey)
+        for prob, s in zip(problems, seeds)
+    ]
+
+
+def _group_by_cost_model(indices, problems) -> list[list[int]]:
+    """One group per cost-model signature — deliberately NOT sub-chunked by
+    size: per-step work in the batched engines is dominated by
+    ``(P*C, touched)``-shaped operations that barely see the padded
+    envelope, so one big group amortizes the fixed per-step overhead best
+    (measured: chunking a 16-candidate Table-1 fleet into 4 size-banded
+    groups cut the speedup from ~4.5x to ~2.7x).  Grouping never changes
+    results — each problem consumes its own RNG stream and padding never
+    affects trajectories."""
+    groups: dict = {}
+    for i in indices:
+        groups.setdefault(batch_group_key(problems[i]), []).append(i)
+    return list(groups.values())
+
+
+def _stacked_ga_costs(runs, backend) -> np.ndarray:
+    """One leading-problem-axis fitness call over several GA runs.
+
+    Stacks each run's ``(n_pop, NB_j)`` geometry (and kind) matrices into a
+    zero-padded ``(A, n_pop, NB_max)`` block — padded lanes have width 0 and
+    cost nothing, so totals equal the per-run 2-D calls exactly.
+    """
+    nb = max(r.W.shape[1] for r in runs)
+    n_pop = runs[0].W.shape[0]
+    W = np.zeros((len(runs), n_pop, nb), dtype=np.int32)
+    H = np.zeros_like(W)
+    hetero = runs[0].Km is not None
+    Km = np.zeros_like(W) if hetero else None
+    for a, r in enumerate(runs):
+        W[a, :, : r.W.shape[1]] = r.W
+        H[a, :, : r.H.shape[1]] = r.H
+        if hetero:
+            Km[a, :, : r.Km.shape[1]] = r.Km
+    return GeneticPacker._batched_costs(
+        W, H, backend, Km, runs[0].kt, runs[0].modes0
+    )
+
+
+def _solve_sa_groups(packer, groups, problems, seeds, backend) -> dict[int, PackingResult]:
+    out: dict[int, PackingResult] = {}
+    for group in groups:
+        probs = [problems[i] for i in group]
+        rngs = [np.random.default_rng(seeds[i]) for i in group]
+        packer._hetero = probs[0].n_kinds > 1
+        blocks = packer._anneal_block(probs, rngs, [[] for _ in group], backend)
+        for i, blk in zip(group, blocks):
+            packer.seed = seeds[i]  # per-problem seed lands in result params
+            out[i] = packer._result(
+                blk.best, blk.best_cost, blk.wall, blk.trace,
+                blk.iterations, backend, uphill=blk.uphill,
+            )
+    return out
+
+
+def _solve_ga_groups(packer, groups, problems, seeds, backend) -> dict[int, PackingResult]:
+    out: dict[int, PackingResult] = {}
+    for group in groups:
+        runs = [
+            packer._start_run(
+                problems[i], np.random.default_rng(seeds[i]), None, backend
+            )
+            for i in group
+        ]
+        totals = _stacked_ga_costs(runs, backend)
+        for run, tot in zip(runs, totals):
+            packer._eval_init(run, tot)
+        live = list(runs)
+        while live:
+            advanced = []
+            pending = []  # (run, mutated) awaiting stacked fitness
+            for run in list(live):
+                if run.gen >= packer.max_generations:
+                    run.done = True
+                    live.remove(run)
+                    continue
+                run.gen += 1
+                now = time.perf_counter() - run.t0
+                if now > packer.max_seconds or run.stale >= packer.patience:
+                    run.done = True
+                    live.remove(run)
+                    continue
+                mutated = packer._mutation_phase(run)
+                advanced.append(run)
+                if mutated:
+                    pending.append((run, mutated))
+            if pending:
+                totals = _stacked_ga_costs([r for r, _ in pending], backend)
+                for (run, mutated), tot in zip(pending, totals):
+                    packer._apply_costs(run, tot, mutated)
+            for run in advanced:
+                packer._track_best(run)
+                packer._tournament(run)
+        for i, run in zip(group, runs):
+            packer.seed = seeds[i]  # per-problem seed lands in result params
+            out[i] = packer._finish_run(run)
+    return out
+
+
+def pack_sweep(
+    problems: Sequence[PackingProblem],
+    algorithm: str = "sa-s",
+    seed: int = 0,
+    seeds: Sequence[int] | None = None,
+    max_seconds: float = 30.0,
+    intra_layer: bool = False,
+    backend: str = "auto",
+    cache: dict | None = None,
+    **hyper,
+) -> SweepResult:
+    """Solve a fleet of packing problems in one vectorized run.
+
+    Parameters mirror :func:`api.pack` (the paper's Table-2 hyperparameter
+    names pass through ``hyper``), applied to every candidate:
+
+    * ``problems`` — the DSE candidates; duplicates (by
+      :meth:`PackingProblem.fingerprint` + seed + settings) are solved once.
+    * ``seed`` / ``seeds`` — one base seed for all candidates (the default,
+      which maximizes dedup), or an explicit per-candidate seed list.
+    * ``intra_layer`` — forbid mixing layers within a bin, as in the
+      paper's intra-layer packing scenario (applies fleet-wide).
+    * ``backend`` — evaluation backend, as in :func:`api.pack`; the batched
+      lanes need a non-``legacy`` backend and otherwise fall back to the
+      serial loop.
+    * ``cache`` — optional caller-owned dict carrying solutions across
+      sweeps; hits skip solving entirely (the DSE outer loop revisits
+      candidates constantly).
+    * ``algorithm="sa-s"`` (the default) gets ``n_chains=8`` unless given;
+      each candidate's result is bit-identical to the standalone
+      ``pack(prob, algorithm, seed=..., n_chains=...)`` run, so batching
+      changes throughput only — never answers (pinned in
+      ``tests/test_dse.py``).
+
+    Returns a :class:`SweepResult` with per-candidate results (input order),
+    an efficiency/Pareto table, and throughput counters.
+    """
+    from .api import make_packer, pack as _pack  # late: api re-exports us
+
+    problems = list(problems)
+    if not problems:
+        raise ValueError("pack_sweep needs at least one problem")
+    algorithm = algorithm.lower()
+    if seeds is None:
+        seeds = [seed] * len(problems)
+    else:
+        seeds = [int(s) for s in seeds]
+        if len(seeds) != len(problems):
+            raise ValueError("seeds must align with problems")
+    if algorithm in _SA_BATCHED:
+        hyper.setdefault("n_chains", 8)
+    t_start = time.perf_counter()
+
+    keys = _task_keys(problems, algorithm, seeds, intra_layer, backend,
+                      max_seconds, hyper)
+    results_by_key: dict[tuple, PackingResult] = {}
+    if cache is not None:
+        for k in set(keys):
+            if k in cache:
+                results_by_key[k] = cache[k]
+    rep: dict[tuple, int] = {}  # first position of each unsolved unique task
+    for i, k in enumerate(keys):
+        if k not in results_by_key and k not in rep:
+            rep[k] = i
+    fresh = tuple(sorted(rep.values()))
+    cache_hits = len(problems) - len(fresh)
+
+    # --- lane dispatch for the unsolved representatives
+    n_groups = 0
+    if rep:
+        todo = sorted(rep.values())
+        solved: dict[int, PackingResult] = {}
+        if algorithm in _SA_BATCHED or algorithm in _GA_LOCKSTEP:
+            packer = make_packer(
+                algorithm, seed=seed, max_seconds=max_seconds,
+                intra_layer=intra_layer, backend=backend, **hyper,
+            )
+            resolved = packer._resolve_backend()
+        else:
+            packer = resolved = None
+        if (
+            algorithm in _SA_BATCHED
+            and resolved != "legacy"
+            and packer.n_chains > 1
+        ):
+            groups = _group_by_cost_model(todo, problems)
+            n_groups = len(groups)
+            solved = _solve_sa_groups(packer, groups, problems, seeds, resolved)
+        elif algorithm in _GA_LOCKSTEP and resolved in ("ref", "pallas"):
+            groups = _group_by_cost_model(todo, problems)
+            n_groups = len(groups)
+            solved = _solve_ga_groups(packer, groups, problems, seeds, resolved)
+        else:
+            # serial fallback: scalar/legacy engines, heuristics, portfolio
+            n_groups = len(todo)
+            for i in todo:
+                solved[i] = _pack(
+                    problems[i], algorithm, seed=seeds[i],
+                    max_seconds=max_seconds, intra_layer=intra_layer,
+                    backend=backend, **hyper,
+                )
+        for i, res in solved.items():
+            results_by_key[keys[i]] = res
+            if cache is not None:
+                cache[keys[i]] = res
+
+    return SweepResult(
+        results=[results_by_key[k] for k in keys],
+        problems=problems,
+        wall_time_s=time.perf_counter() - t_start,
+        n_solved=len(fresh),
+        cache_hits=cache_hits,
+        n_groups=n_groups,
+        algorithm=algorithm,
+        fresh=fresh,
+    )

@@ -23,6 +23,11 @@ Evaluation backends (`GeneticPacker(backend=...)`):
 
 All backends are bit-identical for a fixed seed: cost arithmetic is exact
 integer math and the RNG consumption order never depends on the backend.
+The generation loop is factored into phase helpers over a `_GARun` state
+(`_start_run` / `_mutation_phase` / `_apply_costs` / `_track_best` /
+`_tournament`), which lets ``core.dse.pack_sweep`` drive many problems in
+lockstep and stack their per-generation fitness into one
+leading-problem-axis kernel call (docs/DESIGN.md section 10).
 
 Heterogeneous OCM problems (``PackingProblem(ocm=...)``) add a RAM-kind
 dimension: with probability ``p_kind`` a mutation reassigns random bins'
@@ -263,7 +268,6 @@ class GeneticPacker:
         del self.__dict__["self"]
         # warm state for portfolio restarts (set after each pack())
         self.last_population_: list[Solution] | None = None
-        self._hetero = False  # set per problem in pack()
 
     @property
     def name(self) -> str:
@@ -280,12 +284,16 @@ class GeneticPacker:
             return "python"
 
     def _mutate(
-        self, sol: Solution, rng: np.random.Generator, use_cache: bool = True
+        self,
+        sol: Solution,
+        rng: np.random.Generator,
+        use_cache: bool = True,
+        hetero: bool = False,
     ) -> Solution:
         # heterogeneous OCM: a fraction of mutations reassign RAM kinds
         # instead of moving buffers (the gate is skipped entirely — no RNG
         # draw — on single-kind problems, pinning the legacy stream)
-        if self._hetero and rng.random() < self.p_kind:
+        if hetero and rng.random() < self.p_kind:
             return kind_reassign(sol, rng)
         if self.mutation == "nfd":
             return nfd_repack(
@@ -336,26 +344,42 @@ class GeneticPacker:
             )
         return np.asarray(totals, dtype=np.float64)
 
-    def _fitness_legacy(self, sol: Solution, cost: float) -> float:
+    def _fitness_legacy(self, sol: Solution, cost: float, hetero: bool) -> float:
         f = float(cost)
         if self.layer_weight > 0.0:
             f += self.layer_weight * sol.distinct_layers_per_bin_full()
-        if self._hetero and self.inventory_penalty > 0.0:
+        if hetero and self.inventory_penalty > 0.0:
             f += self.inventory_penalty * sol.inventory_overflow()
         return f
 
     # ---------------------------------------------------------------- pack
-    def pack(
-        self, prob: PackingProblem, init_pop: Sequence[Solution] | None = None
-    ) -> PackingResult:
-        rng = np.random.default_rng(self.seed)
-        t0 = time.perf_counter()
-        backend = self._resolve_backend()
-        batched = backend in ("ref", "pallas")
-        use_cache = backend != "legacy"
-        self._hetero = prob.n_kinds > 1
-        inv_pen = self.inventory_penalty if self._hetero else 0.0
-        modes0 = prob.kind_tables[0][1]  # == BRAM18_MODES on default problems
+    #
+    # The generation loop is split into phase helpers operating on a `_GARun`
+    # state object so that `core.dse`'s lockstep sweep driver can interleave
+    # many problems' generations and stack their fitness evaluations into one
+    # leading-problem-axis `binpack_fitness` call, while `pack()` below
+    # reassembles the exact same single-problem loop (the backend-parity
+    # tests in tests/test_engine.py pin that this refactor changed nothing).
+
+    def _start_run(
+        self,
+        prob: PackingProblem,
+        rng: np.random.Generator,
+        init_pop: Sequence[Solution] | None,
+        backend: str,
+    ) -> "_GARun":
+        """Build one problem's population + evaluation matrices (no RNG
+        draws beyond the population init itself)."""
+        run = _GARun()
+        run.prob = prob
+        run.rng = rng
+        run.t0 = time.perf_counter()
+        run.backend = backend
+        run.batched = backend in ("ref", "pallas")
+        run.use_cache = backend != "legacy"
+        run.hetero = prob.n_kinds > 1
+        run.inv_pen = self.inventory_penalty if run.hetero else 0.0
+        run.modes0 = prob.kind_tables[0][1]  # == BRAM18_MODES on defaults
         pop: list[Solution] = [s.copy() for s in (init_pop or [])][: self.n_pop]
         pop += [
             nfd_from_scratch(
@@ -368,146 +392,174 @@ class GeneticPacker:
             )
             for k in range(len(pop), self.n_pop)
         ]
+        run.pop = pop
         # on heterogeneous problems selection AND best-tracking use the
         # inventory-penalized cost, so an overflowing packing can never beat
         # a feasible one; ``ovfs`` mirrors ``costs`` per individual
-        ovfs = np.zeros(self.n_pop, dtype=np.float64) if self._hetero else None
-        if batched:
+        run.ovfs = np.zeros(self.n_pop, dtype=np.float64) if run.hetero else None
+        if run.batched:
             # population geometry matrices: row i = per-bin (width, height) of
             # pop[i], zero-padded to the worst case of one buffer per bin
-            W = np.zeros((self.n_pop, prob.n), dtype=np.int32)
-            H = np.zeros((self.n_pop, prob.n), dtype=np.int32)
+            run.W = np.zeros((self.n_pop, prob.n), dtype=np.int32)
+            run.H = np.zeros((self.n_pop, prob.n), dtype=np.int32)
             # heterogeneous problems add a parallel RAM-kind matrix
-            Km = np.zeros((self.n_pop, prob.n), dtype=np.int32) if self._hetero else None
-            kt = prob.kind_tables if self._hetero else None
+            run.Km = (
+                np.zeros((self.n_pop, prob.n), dtype=np.int32)
+                if run.hetero
+                else None
+            )
+            run.kt = prob.kind_tables if run.hetero else None
             for i, s in enumerate(pop):
-                s.fill_geometry(W[i], H[i])
-                if Km is not None:
-                    s.fill_kinds(Km[i])
-                    ovfs[i] = s.inventory_overflow()
-            costs = self._batched_costs(W, H, backend, Km, kt, modes0)
+                s.fill_geometry(run.W[i], run.H[i])
+                if run.Km is not None:
+                    s.fill_kinds(run.Km[i])
+        else:
+            run.W = run.H = run.Km = None
+            run.kt = None
+        if run.ovfs is not None:
+            for i, s in enumerate(pop):
+                run.ovfs[i] = s.inventory_overflow()
+        return run
+
+    def _eval_init(self, run: "_GARun", totals=None) -> None:
+        """Initial population evaluation; ``totals`` carries the batched
+        kernel costs (the lockstep driver computes them stacked)."""
+        if run.batched:
+            costs = np.asarray(totals, dtype=np.float64)
             fits = np.asarray(
                 [
-                    fitness(s, self.layer_weight, cost=c, inventory_penalty=inv_pen,
-                            overflow=None if ovfs is None else ovfs[i])
-                    for i, (s, c) in enumerate(zip(pop, costs))
+                    fitness(s, self.layer_weight, cost=c,
+                            inventory_penalty=run.inv_pen,
+                            overflow=None if run.ovfs is None else run.ovfs[i])
+                    for i, (s, c) in enumerate(zip(run.pop, costs))
+                ]
+            )
+        elif run.use_cache:
+            costs = np.asarray([s.cost() for s in run.pop], dtype=np.float64)
+            fits = np.asarray(
+                [
+                    fitness(s, self.layer_weight, cost=c,
+                            inventory_penalty=run.inv_pen,
+                            overflow=None if run.ovfs is None else run.ovfs[i])
+                    for i, (s, c) in enumerate(zip(run.pop, costs))
                 ]
             )
         else:
-            W = H = Km = None
-            kt = None
-            if use_cache:
-                costs = np.asarray([s.cost() for s in pop], dtype=np.float64)
-                if ovfs is not None:
-                    for i, s in enumerate(pop):
-                        ovfs[i] = s.inventory_overflow()
-                fits = np.asarray(
-                    [
-                        fitness(s, self.layer_weight, cost=c, inventory_penalty=inv_pen,
-                                overflow=None if ovfs is None else ovfs[i])
-                        for i, (s, c) in enumerate(zip(pop, costs))
-                    ]
-                )
-            else:
-                costs = np.asarray([s.cost_full() for s in pop], dtype=np.float64)
-                if ovfs is not None:
-                    for i, s in enumerate(pop):
-                        ovfs[i] = s.inventory_overflow()
-                fits = np.asarray(
-                    [self._fitness_legacy(s, c) for s, c in zip(pop, costs)]
-                )
-        sel = costs if ovfs is None else costs + inv_pen * ovfs
+            costs = np.asarray([s.cost_full() for s in run.pop], dtype=np.float64)
+            fits = np.asarray(
+                [
+                    self._fitness_legacy(s, c, run.hetero)
+                    for s, c in zip(run.pop, costs)
+                ]
+            )
+        run.costs = costs
+        run.fits = fits
+        sel = costs if run.ovfs is None else costs + run.inv_pen * run.ovfs
         best_i = int(np.argmin(sel))
-        best = pop[best_i].copy()
-        best_cost = int(costs[best_i])
-        best_sel = float(sel[best_i])
+        run.best = run.pop[best_i].copy()
+        run.best_cost = int(costs[best_i])
+        run.best_sel = float(sel[best_i])
         # hetero traces record the penalized cost (the annealed/selected
         # quantity) so the curve stays monotone; raw == penalized otherwise
-        trace = [(time.perf_counter() - t0,
-                  best_sel if self._hetero else best_cost)]
-        stale = 0
-        gen = 0
-        while gen < self.max_generations:
-            gen += 1
-            now = time.perf_counter() - t0
-            if now > self.max_seconds or stale >= self.patience:
-                break
-            # --- mutation (mutated individuals are fresh objects; unmutated
-            # ones may be shared references from selection, never mutated
-            # in place)
-            mutated: list[int] = []
-            for i in range(self.n_pop):
-                if rng.random() < self.p_mut:
-                    pop[i] = self._mutate(pop[i], rng, use_cache=use_cache)
-                    if ovfs is not None:
-                        ovfs[i] = pop[i].inventory_overflow()
-                    if batched:
-                        pop[i].fill_geometry(W[i], H[i])
-                        if Km is not None:
-                            pop[i].fill_kinds(Km[i])
-                        mutated.append(i)
-                    elif use_cache:
-                        costs[i] = pop[i].cost()
-                        fits[i] = fitness(
-                            pop[i], self.layer_weight, cost=costs[i],
-                            inventory_penalty=inv_pen,
-                            overflow=None if ovfs is None else ovfs[i],
-                        )
-                    else:
-                        costs[i] = pop[i].cost_full()
-                        fits[i] = self._fitness_legacy(pop[i], costs[i])
-            if batched and mutated:
-                totals = self._batched_costs(W, H, backend, Km, kt, modes0)
-                for i in mutated:
-                    costs[i] = totals[i]
-                    fits[i] = fitness(
-                        pop[i], self.layer_weight, cost=costs[i],
-                        inventory_penalty=inv_pen,
-                        overflow=None if ovfs is None else ovfs[i],
+        run.trace = [(time.perf_counter() - run.t0,
+                      run.best_sel if run.hetero else run.best_cost)]
+        run.stale = 0
+        run.gen = 0
+
+    def _mutation_phase(self, run: "_GARun") -> list[int]:
+        """One generation's mutations (mutated individuals are fresh objects;
+        unmutated ones may be shared references from selection, never mutated
+        in place).  Returns the mutated indices; on the batched path their
+        kernel costs are applied afterwards via `_apply_costs`."""
+        mutated: list[int] = []
+        for i in range(self.n_pop):
+            if run.rng.random() < self.p_mut:
+                run.pop[i] = self._mutate(
+                    run.pop[i], run.rng, use_cache=run.use_cache,
+                    hetero=run.hetero,
+                )
+                if run.ovfs is not None:
+                    run.ovfs[i] = run.pop[i].inventory_overflow()
+                if run.batched:
+                    run.pop[i].fill_geometry(run.W[i], run.H[i])
+                    if run.Km is not None:
+                        run.pop[i].fill_kinds(run.Km[i])
+                    mutated.append(i)
+                elif run.use_cache:
+                    run.costs[i] = run.pop[i].cost()
+                    run.fits[i] = fitness(
+                        run.pop[i], self.layer_weight, cost=run.costs[i],
+                        inventory_penalty=run.inv_pen,
+                        overflow=None if run.ovfs is None else run.ovfs[i],
                     )
-            # --- track best (penalized on heterogeneous problems)
-            sel = costs if ovfs is None else costs + inv_pen * ovfs
-            gi = int(np.argmin(sel))
-            if float(sel[gi]) < best_sel:
-                best_sel = float(sel[gi])
-                best_cost = int(costs[gi])
-                best = pop[gi].copy()
-                trace.append((time.perf_counter() - t0,
-                              best_sel if self._hetero else best_cost))
-                stale = 0
-            else:
-                stale += 1
-            # --- tournament selection (with replacement) + elitism
-            idx = rng.integers(self.n_pop, size=(self.n_pop, self.n_tour))
-            winners = idx[np.arange(self.n_pop), np.argmin(fits[idx], axis=1)]
-            winners[0] = int(np.argmin(fits))  # elitism: best survives
-            pop = [pop[int(w)] for w in winners]
-            costs = costs[winners]
-            fits = fits[winners]
-            if ovfs is not None:
-                ovfs = ovfs[winners]
-            if batched:
-                W = W[winners]
-                H = H[winners]
-                if Km is not None:
-                    Km = Km[winners]
-        wall = time.perf_counter() - t0
-        trace.append((wall, best_sel if self._hetero else best_cost))
-        self.last_population_ = pop
+                else:
+                    run.costs[i] = run.pop[i].cost_full()
+                    run.fits[i] = self._fitness_legacy(
+                        run.pop[i], run.costs[i], run.hetero
+                    )
+        return mutated
+
+    def _apply_costs(self, run: "_GARun", totals, mutated: list[int]) -> None:
+        for i in mutated:
+            run.costs[i] = totals[i]
+            run.fits[i] = fitness(
+                run.pop[i], self.layer_weight, cost=run.costs[i],
+                inventory_penalty=run.inv_pen,
+                overflow=None if run.ovfs is None else run.ovfs[i],
+            )
+
+    def _track_best(self, run: "_GARun") -> None:
+        # --- track best (penalized on heterogeneous problems)
+        sel = (
+            run.costs
+            if run.ovfs is None
+            else run.costs + run.inv_pen * run.ovfs
+        )
+        gi = int(np.argmin(sel))
+        if float(sel[gi]) < run.best_sel:
+            run.best_sel = float(sel[gi])
+            run.best_cost = int(run.costs[gi])
+            run.best = run.pop[gi].copy()
+            run.trace.append((time.perf_counter() - run.t0,
+                              run.best_sel if run.hetero else run.best_cost))
+            run.stale = 0
+        else:
+            run.stale += 1
+
+    def _tournament(self, run: "_GARun") -> None:
+        # --- tournament selection (with replacement) + elitism
+        idx = run.rng.integers(self.n_pop, size=(self.n_pop, self.n_tour))
+        winners = idx[np.arange(self.n_pop), np.argmin(run.fits[idx], axis=1)]
+        winners[0] = int(np.argmin(run.fits))  # elitism: best survives
+        run.pop = [run.pop[int(w)] for w in winners]
+        run.costs = run.costs[winners]
+        run.fits = run.fits[winners]
+        if run.ovfs is not None:
+            run.ovfs = run.ovfs[winners]
+        if run.batched:
+            run.W = run.W[winners]
+            run.H = run.H[winners]
+            if run.Km is not None:
+                run.Km = run.Km[winners]
+
+    def _finish_run(self, run: "_GARun") -> PackingResult:
+        wall = time.perf_counter() - run.t0
+        run.trace.append((wall, run.best_sel if run.hetero else run.best_cost))
+        self.last_population_ = run.pop
         extra = (
             dict(p_kind=self.p_kind, inventory_penalty=self.inventory_penalty,
-                 overflow=best.inventory_overflow())
-            if self._hetero
+                 overflow=run.best.inventory_overflow())
+            if run.hetero
             else {}
         )
         return PackingResult(
-            solution=best,
-            cost=best_cost,
-            efficiency=best.efficiency(),
+            solution=run.best,
+            cost=run.best_cost,
+            efficiency=run.best.efficiency(),
             wall_time_s=wall,
             algorithm=self.name + ("-intra" if self.intra_layer else ""),
-            trace=trace,
-            iterations=gen,
+            trace=run.trace,
+            iterations=run.gen,
             params=dict(
                 n_pop=self.n_pop,
                 n_tour=self.n_tour,
@@ -515,10 +567,53 @@ class GeneticPacker:
                 p_adm_w=self.p_adm_w,
                 p_adm_h=self.p_adm_h,
                 seed=self.seed,
-                backend=backend,
+                backend=run.backend,
                 **extra,
             ),
         )
+
+    def pack(
+        self, prob: PackingProblem, init_pop: Sequence[Solution] | None = None
+    ) -> PackingResult:
+        rng = np.random.default_rng(self.seed)
+        backend = self._resolve_backend()
+        run = self._start_run(prob, rng, init_pop, backend)
+        totals = (
+            self._batched_costs(run.W, run.H, backend, run.Km, run.kt, run.modes0)
+            if run.batched
+            else None
+        )
+        self._eval_init(run, totals)
+        while run.gen < self.max_generations:
+            run.gen += 1
+            now = time.perf_counter() - run.t0
+            if now > self.max_seconds or run.stale >= self.patience:
+                break
+            mutated = self._mutation_phase(run)
+            if run.batched and mutated:
+                totals = self._batched_costs(
+                    run.W, run.H, backend, run.Km, run.kt, run.modes0
+                )
+                self._apply_costs(run, totals, mutated)
+            self._track_best(run)
+            self._tournament(run)
+        return self._finish_run(run)
+
+
+class _GARun:
+    """One problem's GA state, advanced generation-wise by the phase helpers
+    of `GeneticPacker` (either its own `pack()` loop or `core.dse`'s
+    lockstep multi-problem driver)."""
+
+    __slots__ = (
+        "prob", "rng", "t0", "backend", "batched", "use_cache", "hetero",
+        "inv_pen", "modes0", "kt", "pop", "costs", "fits", "ovfs",
+        "W", "H", "Km", "best", "best_cost", "best_sel", "trace",
+        "stale", "gen", "done",
+    )
+
+    def __init__(self):
+        self.done = False
 
 
 def _default_jax_backend() -> str:

@@ -43,6 +43,7 @@ docs/DESIGN.md section 3 for the heterogeneous extension.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
 from functools import reduce
 from typing import Iterable, Sequence
@@ -394,6 +395,22 @@ class PackingProblem:
     def lower_bound(self) -> int:
         """Information-theoretic minimum cost in units (capacity bound)."""
         return -(-self.total_bits // self.cost_unit_bits)
+
+    def fingerprint(self) -> str:
+        """Content hash over everything that affects packing outcomes.
+
+        Two problems with equal fingerprints are interchangeable to every
+        solver: same buffer multiset (in order), same cardinality bound,
+        same RAM kinds / mode tables / inventory counts.  Names are
+        excluded, so renamed duplicates inside a DSE sweep still dedup
+        (``core.dse.pack_sweep`` keys its solution cache on this).
+        """
+        h = hashlib.blake2b(digest_size=16)
+        h.update(self.widths.tobytes())
+        h.update(self.depths.tobytes())
+        h.update(self.layers.tobytes())
+        h.update(repr((self.max_items, self.kind_counts, self.kind_tables)).encode())
+        return h.hexdigest()
 
 
 # geometry-matrix column indices (Solution._geom)
@@ -855,6 +872,180 @@ def encode_chain_kinds(solutions: Sequence["Solution"], n_slots: int) -> np.ndar
     for i, s in enumerate(solutions):
         s.fill_kinds(k[i])
     return k
+
+
+# ------------------------------------------------------------ problem batches
+def batch_group_key(prob: PackingProblem) -> tuple:
+    """Hashable cost-model signature for cross-problem batching.
+
+    Problems sharing this key evaluate on identical per-kind mode tables and
+    unit weights, so their bins can ride through one batched kernel call
+    (``kind_tables`` are static/jit-cached arguments); inventory *counts* may
+    differ per problem — they only enter the host-side overflow penalty.
+    ``core.dse.pack_sweep`` groups a mixed fleet by this key; see
+    docs/DESIGN.md section 10.
+    """
+    return (prob.ram_kinds, prob.kind_tables)
+
+
+@dataclasses.dataclass
+class ProblemBatch:
+    """A fleet of problems padded to one ``(n_max, cap_max)`` envelope.
+
+    The cross-problem analogue of the chain codecs above: per-buffer tables
+    become zero-padded ``(P, n_max)`` matrices with a parallel boolean
+    ``mask`` (True where a real buffer lives), and per-problem scalars become
+    ``(P,)`` vectors.  All member problems must share one cost-model
+    signature (:func:`batch_group_key`) — the shared ``kind_tables`` are what
+    lets a whole fleet go through one batched kernel call — while buffer
+    counts, cardinality bounds (``max_items``), and inventory *counts* vary
+    per problem.  Padded lanes are masked by construction: a padded buffer
+    slot has width 0 and a padded problem row costs nothing on any backend.
+
+    ``ext_tables`` appends the sentinel column the vectorized engines index
+    with (slot id ``n_max`` -> width 0 / depth 0 / layer -1), mirroring the
+    single-problem ``np.append(prob.widths, 0)`` convention.
+    """
+
+    widths: np.ndarray      # (P, n_max) int64, zero beyond problem p's count
+    depths: np.ndarray      # (P, n_max) int64
+    layers: np.ndarray      # (P, n_max) int64, -1 padded
+    mask: np.ndarray        # (P, n_max) bool — True where a real buffer lives
+    n: np.ndarray           # (P,) live buffer counts
+    max_items: np.ndarray   # (P,) per-problem cardinality bounds
+    kind_tables: tuple      # shared ((unit_weight, modes), ...) across the fleet
+    kind_counts: np.ndarray  # (P, K) inventory counts (-1 = unbounded)
+    ram_kinds: tuple        # shared RAMKind tuple (decode needs capacities)
+    has_ocm: tuple          # per problem: built with an OCMInventory?
+    names: tuple            # per-problem names
+    ocm_names: tuple        # per-problem inventory names ("" without ocm)
+
+    @property
+    def size(self) -> int:
+        return int(self.widths.shape[0])
+
+    @property
+    def n_max(self) -> int:
+        return int(self.widths.shape[1])
+
+    @property
+    def cap_max(self) -> int:
+        return int(self.max_items.max())
+
+    @property
+    def n_kinds(self) -> int:
+        return len(self.kind_tables)
+
+    @property
+    def kind_weights(self) -> np.ndarray:
+        return np.asarray([w for w, _ in self.kind_tables], dtype=np.int64)
+
+    def ext_tables(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(widths, depths, layers) as ``(P, n_max + 1)`` lookup tables whose
+        last column is the empty-slot sentinel (0 / 0 / -1)."""
+        p = self.size
+        w = np.concatenate([self.widths, np.zeros((p, 1), np.int64)], axis=1)
+        d = np.concatenate([self.depths, np.zeros((p, 1), np.int64)], axis=1)
+        l = np.concatenate([self.layers, np.full((p, 1), -1, np.int64)], axis=1)
+        return w, d, l
+
+    def overflow_rows(self, used: np.ndarray, rows: np.ndarray) -> np.ndarray:
+        """Unit-weighted inventory overflow with per-row counts.
+
+        ``used`` is (R, K) per-kind primitive usage, ``rows`` maps each row
+        to its problem index — the fleet generalization of
+        :meth:`PackingProblem.overflow_units`.
+        """
+        counts = self.kind_counts[rows]
+        over = np.maximum(used - counts, 0)
+        over = np.where(counts < 0, 0, over)
+        return (over * self.kind_weights).sum(axis=-1)
+
+
+def encode_problem_batch(problems: Sequence[PackingProblem]) -> ProblemBatch:
+    """Pad a fleet of cost-model-compatible problems into a `ProblemBatch`.
+
+    Raises ``ValueError`` on an empty fleet or mixed cost models (different
+    RAM kinds / mode tables) — callers solving a mixed fleet should first
+    group by :func:`batch_group_key` (``pack_sweep`` does).
+    """
+    if not problems:
+        raise ValueError("encode_problem_batch needs at least one problem")
+    key = batch_group_key(problems[0])
+    for prob in problems[1:]:
+        if batch_group_key(prob) != key:
+            raise ValueError(
+                "problems mix cost models (RAM kinds / mode tables); group "
+                "them with batch_group_key before batching"
+            )
+    p = len(problems)
+    n_max = max(prob.n for prob in problems)
+    widths = np.zeros((p, n_max), dtype=np.int64)
+    depths = np.zeros((p, n_max), dtype=np.int64)
+    layers = np.full((p, n_max), -1, dtype=np.int64)
+    mask = np.zeros((p, n_max), dtype=bool)
+    for j, prob in enumerate(problems):
+        widths[j, : prob.n] = prob.widths
+        depths[j, : prob.n] = prob.depths
+        layers[j, : prob.n] = prob.layers
+        mask[j, : prob.n] = True
+    return ProblemBatch(
+        widths=widths,
+        depths=depths,
+        layers=layers,
+        mask=mask,
+        n=np.asarray([prob.n for prob in problems], dtype=np.int64),
+        max_items=np.asarray([prob.max_items for prob in problems], dtype=np.int64),
+        kind_tables=problems[0].kind_tables,
+        kind_counts=np.stack([prob._kind_counts_arr for prob in problems]),
+        ram_kinds=problems[0].ram_kinds,
+        has_ocm=tuple(prob.ocm is not None for prob in problems),
+        names=tuple(prob.name for prob in problems),
+        ocm_names=tuple(
+            prob.ocm.name if prob.ocm is not None else "" for prob in problems
+        ),
+    )
+
+
+def decode_problem_batch(batch: ProblemBatch) -> list[PackingProblem]:
+    """Reconstruct the problem list from a `ProblemBatch` (codec inverse).
+
+    Round-trips everything a solver can observe: buffer geometry/layers (in
+    order), ``max_items``, RAM kinds and mode tables, inventory counts, and
+    names.  Per-buffer ``Buffer.name`` labels are not carried by the batch
+    and come back empty.
+    """
+    out: list[PackingProblem] = []
+    for j in range(batch.size):
+        nj = int(batch.n[j])
+        bufs = [
+            Buffer(
+                width=int(batch.widths[j, i]),
+                depth=int(batch.depths[j, i]),
+                layer=int(batch.layers[j, i]),
+            )
+            for i in range(nj)
+        ]
+        if batch.has_ocm[j]:
+            ocm = OCMInventory(
+                kinds=batch.ram_kinds,
+                counts=tuple(int(x) for x in batch.kind_counts[j]),
+                name=batch.ocm_names[j],
+            )
+            prob = PackingProblem(
+                bufs, max_items=int(batch.max_items[j]),
+                name=batch.names[j], ocm=ocm,
+            )
+        else:
+            k0 = batch.ram_kinds[0]
+            prob = PackingProblem(
+                bufs,
+                bram=BRAMSpec(modes=tuple(k0.modes), capacity_bits=k0.capacity_bits),
+                max_items=int(batch.max_items[j]),
+                name=batch.names[j],
+            )
+        out.append(prob)
+    return out
 
 
 @dataclasses.dataclass

@@ -37,7 +37,12 @@ Three engines share this class:
   compacted out of the live slot window.  Within-bin slot order differs
   from the scalar loop's list order (array removal swaps with the last
   slot), so multi-chain runs define their own — still backend-identical —
-  trajectories.
+  trajectories.  The engine is implemented as a *fleet* core
+  (`_anneal_block`): P problems x C chains advance as one problem-major
+  ``(P*C, ...)`` array program with per-problem RNG streams, temperature
+  ladders, best tracking, and early-exit freezing — ``core.dse.pack_sweep``
+  batches whole DSE candidate fleets through it, and a single-problem run
+  is literally ``P == 1`` (docs/DESIGN.md section 10).
 
 On heterogeneous OCM problems every engine anneals the inventory-penalized
 cost: with probability ``p_kind`` a move is a RAM-kind flip of a random bin
@@ -52,6 +57,7 @@ PR 2.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 import time
 from typing import Sequence
@@ -75,7 +81,22 @@ from .problem import (
     encode_chain_geometry,
     encode_chain_items,
     encode_chain_kinds,
+    encode_problem_batch,
 )
+
+
+@dataclasses.dataclass
+class _BlockOut:
+    """Per-problem outcome of one `_anneal_block` fleet run."""
+
+    best: Solution
+    best_cost: int
+    trace: list
+    iterations: int
+    chains: list
+    incumbent: int  # index of the chain holding the best incumbent state
+    uphill: tuple[int, int]
+    wall: float
 
 
 class SimulatedAnnealingPacker:
@@ -411,95 +432,168 @@ class SimulatedAnnealingPacker:
             )
         return t0s
 
-    def _pack_multi_chain(self, prob: PackingProblem, init, backend):
-        """C temperature-laddered chains advanced in lock-step, all-numpy."""
-        from repro.kernels.binpack_sa_step.ops import metropolis_mask, sa_step_deltas
+    def _pack_multi_chain(self, prob, init, backend):
+        """C temperature-laddered chains advanced in lock-step, all-numpy.
 
-        n_chains = self.n_chains
-        cap = prob.max_items
-        n = prob.n
-        n_moves = max(self.swap_moves, 1)
-        width = 2 * n_moves
-        interpret = backend == "pallas" and _default_jax_backend() != "tpu"
-        hetero = self._hetero
-        lam = self.inventory_penalty
-        pk = self.p_kind if hetero else 0.0
-        kt = prob.kind_tables if hetero else None
-        modes0 = prob.kind_tables[0][1]  # == BRAM18_MODES on default problems
-        n_kinds = prob.n_kinds
-        t_start = time.perf_counter()
-        master = np.random.default_rng(self.seed)
-
-        # --- chain init: warm starts first, fresh NFD packings for the rest
+        A thin wrapper over the fleet engine `_anneal_block`: one problem,
+        one RNG stream — the single-problem engine is literally ``P == 1``.
+        """
         if init is None:
             inits: list[Solution] = []
         elif isinstance(init, Solution):
             inits = [init]
         else:
-            inits = [s for s in init if s is not None][:n_chains]
-        sols = [s.copy() for s in inits]
-        sols += [
-            nfd_from_scratch(
-                prob,
-                master,
-                p_adm_w=self.p_adm_w,
-                p_adm_h=self.p_adm_h,
-                intra_layer=self.intra_layer,
-                sort_by_width=(c % 2 == 1),
-            )
-            for c in range(len(sols), n_chains)
-        ]
-        items, counts = encode_chain_items(sols, cap)
+            inits = [s for s in init if s is not None][: self.n_chains]
+        rng = np.random.default_rng(self.seed)
+        out = self._anneal_block([prob], [rng], [inits], backend)[0]
+        self.last_solution_ = out.chains[out.incumbent]
+        self.last_chains_ = out.chains
+        return self._result(
+            out.best, out.best_cost, out.wall, out.trace, out.iterations,
+            backend, uphill=out.uphill,
+        )
+
+    def _anneal_block(
+        self,
+        probs: Sequence[PackingProblem],
+        rngs: Sequence[np.random.Generator],
+        inits: Sequence[Sequence[Solution]],
+        backend: str,
+    ) -> list[_BlockOut]:
+        """The vectorized annealer over a *fleet*: P problems x C chains.
+
+        Every state matrix is laid out problem-major: row ``j * C + c`` is
+        chain ``c`` of problem ``j``, padded to the fleet's common
+        ``(NB, cap_max)`` envelope (`encode_problem_batch`).  Each problem
+        consumes only its own ``rngs[j]`` stream — chain init first, then
+        one uniform block plus one Metropolis block per step while the
+        problem is live — so each problem's trajectory is bit-identical to
+        a standalone ``n_chains=C`` run seeded the same way (pinned by
+        ``tests/test_dse.py``), and the single-problem engine is literally
+        ``P == 1``.  A problem *freezes* (stops drawing RNG, stops moving)
+        once every one of its chains exceeds ``patience``; the loop exits
+        when all problems are frozen or the shared iteration/wall budget
+        runs out.  Per-problem temperature ladders, best tracking, traces,
+        and best-chain exchange stay independent; the delta-cost kernel and
+        Metropolis rule run once over all ``P * C`` rows per step.  See
+        docs/DESIGN.md section 10.
+        """
+        from repro.kernels.binpack_sa_step.ops import metropolis_mask, sa_step_deltas
+
+        n_probs = len(probs)
+        n_chains = self.n_chains
+        n_rows = n_probs * n_chains
+        n_moves = max(self.swap_moves, 1)
+        width = 2 * n_moves
+        interpret = backend == "pallas" and _default_jax_backend() != "tpu"
+        batch = encode_problem_batch(probs)
+        hetero = batch.n_kinds > 1
+        lam = self.inventory_penalty
+        pk = self.p_kind if hetero else 0.0
+        kt = batch.kind_tables if hetero else None
+        modes0 = batch.kind_tables[0][1]  # == BRAM18_MODES on default problems
+        n_kinds = batch.n_kinds
+        cap_max = batch.cap_max
+        any_bounded = bool((batch.kind_counts >= 0).any())
+        t_start = time.perf_counter()
+
+        # --- per-problem chain init: warm starts first, fresh NFD for the rest
+        sols: list[Solution] = []
+        for j, prob in enumerate(probs):
+            mine = [s.copy() for s in inits[j][:n_chains]]
+            mine += [
+                nfd_from_scratch(
+                    prob,
+                    rngs[j],
+                    p_adm_w=self.p_adm_w,
+                    p_adm_h=self.p_adm_h,
+                    intra_layer=self.intra_layer,
+                    sort_by_width=(c % 2 == 1),
+                )
+                for c in range(len(mine), n_chains)
+            ]
+            sols.extend(mine)
+        items, counts = encode_chain_items(sols, cap_max)
         bw, bh, live = encode_chain_geometry(sols, items.shape[1])
         costs = np.asarray([s.cost() for s in sols], dtype=np.int64)
+
+        pi = np.repeat(np.arange(n_probs), n_chains)  # row -> problem index
+        caps_r = np.repeat(batch.max_items, n_chains)  # per-row cardinality
+        # buffer lookup tables with a zero/empty sentinel in the last column;
+        # a single-problem fleet keeps the flat 1-D tables (PR 2's hot path)
+        wext, dext, lext = batch.ext_tables()
+        if n_probs == 1:
+            wtab, dtab, ltab = wext[0], dext[0], lext[0]
+        else:
+            wtab, dtab, ltab = wext, dext, lext
+        sentinel = wtab.shape[-1] - 1
+
+        def row_lookup(tab, ids):
+            """Per-row buffer-table gather (ids row-aligned, any rank)."""
+            if tab.ndim == 1:
+                return tab[ids]
+            rows = pi.reshape((n_rows,) + (1,) * (ids.ndim - 1))
+            return tab[rows, ids]
+
         if hetero:
-            # per-chain RAM-kind lane + per-kind primitive usage (C, K)
+            # per-chain RAM-kind lane + per-kind primitive usage (R, K)
             bk = encode_chain_kinds(sols, items.shape[1])
             UK = np.stack([s.used_primitives() for s in sols])
-            ovf_rows = prob.overflow_units
+
+            def ovf_rows(uk):
+                return batch.overflow_rows(uk, pi)
+
             pcosts = costs + lam * ovf_rows(UK)
         else:
             bk = None
             UK = None
             pcosts = costs
 
-        # buffer lookup tables with a zero/empty sentinel at index n
-        widths_ext = np.append(prob.widths, 0)
-        depths_ext = np.append(prob.depths, 0)
-        layers_ext = np.append(prob.layers, -1)
-
         best_pcosts = pcosts.copy()  # per-chain best (drives per-chain patience)
-        gi = int(np.argmin(pcosts))
-        gbest_pcost = pcosts[gi]
-        gbest_cost = int(costs[gi])
-        g_items = items[gi].copy()
-        g_counts = counts[gi].copy()
-        g_live = int(live[gi])
-        g_kinds = bk[gi].copy() if hetero else None
-        g_UK = UK[gi].copy() if hetero else None
+        poff = np.arange(n_probs) * n_chains
+        gis = pcosts.reshape(n_probs, n_chains).argmin(axis=1) + poff
+        gbest_pcost = pcosts[gis].copy()  # per-problem global best
+        gbest_cost = costs[gis].copy()
+        g_items = items[gis].copy()
+        g_counts = counts[gis].copy()
+        g_live = live[gis].copy()
+        g_kinds = bk[gis].copy() if hetero else None
+        g_UK = UK[gis].copy() if hetero else None
         # hetero traces record the penalized cost (monotone); raw otherwise
-        trace = [(time.perf_counter() - t_start,
-                  float(gbest_pcost) if hetero else gbest_cost)]
-        t0s = self._chain_t0s()
-        ci = np.arange(n_chains)
-        stale = np.zeros(n_chains, dtype=np.int64)
-        steps = np.zeros(n_chains, dtype=np.int64)
-        tslots = np.zeros((n_chains, width), dtype=np.int64)
-        entry_ok = np.zeros((n_chains, width), dtype=bool)
-        uphill_prop = 0
-        uphill_acc = 0
+        now = time.perf_counter() - t_start
+        traces = [
+            [(now, float(gbest_pcost[j]) if hetero else int(gbest_cost[j]))]
+            for j in range(n_probs)
+        ]
+        t0s = np.tile(self._chain_t0s(), n_probs)
+        ri = np.arange(n_rows)
+        stale = np.zeros(n_rows, dtype=np.int64)
+        steps = np.zeros(n_rows, dtype=np.int64)
+        tslots = np.zeros((n_rows, width), dtype=np.int64)
+        entry_ok = np.zeros((n_rows, width), dtype=bool)
+        up_prop = np.zeros(n_probs, dtype=np.int64)
+        up_acc = np.zeros(n_probs, dtype=np.int64)
+        n_u = 6 if hetero else 4
+        u_all = np.zeros((n_moves, n_u, n_rows))
+        u_metro = np.zeros(n_rows)
         it = 0
         while it < self.max_iterations:
             if (it & 0xFF) == 0 and time.perf_counter() - t_start > self.max_seconds:
                 break
             active = stale < self.patience
-            if not active.any():
+            act_p = active.reshape(n_probs, n_chains).any(axis=1)
+            if not act_p.any():
                 break
-            # --- propose: one uniform block drives every chain's move
-            # sequence (two extra rows — kind-move gate and kind pick — only
-            # on heterogeneous problems, so the single-kind block and its
-            # trajectories are untouched)
-            u_all = master.random((n_moves, 6 if hetero else 4, n_chains))
+            # --- propose: each live problem draws one uniform block from its
+            # own stream (two extra rows — kind-move gate and kind pick —
+            # only on heterogeneous problems, so the single-kind block and
+            # its trajectories are untouched); frozen problems draw nothing
+            # and their rows stay masked by ``active`` below
+            for j in np.flatnonzero(act_p):
+                lo = j * n_chains
+                u_all[:, :, lo : lo + n_chains] = rngs[j].random(
+                    (n_moves, n_u, n_chains)
+                )
             if hetero:
                 bk_new = bk.copy()  # flips land here; commit is per-chain
             snaps = []
@@ -525,42 +619,46 @@ class SimulatedAnnealingPacker:
                 ok = active & (live >= 2) & (src != dst)
                 if hetero:
                     ok &= ~kflip
-                cnt_s = counts[ci, src]
+                cnt_s = counts[ri, src]
                 ok &= cnt_s > 0
                 item_k = np.minimum(
                     (u[2] * cnt_s).astype(np.int64), np.maximum(cnt_s - 1, 0)
                 )
-                item = items[ci, src, item_k]  # masked below where ~ok
-                cnt_d = counts[ci, dst]
-                item_safe = np.where(item >= 0, item, n)
+                item = items[ri, src, item_k]  # masked below where ~ok
+                cnt_d = counts[ri, dst]
+                item_safe = np.where(item >= 0, item, sentinel)
                 if self.intra_layer:
-                    dst_first = items[ci, dst, 0]
+                    dst_first = items[ri, dst, 0]
                     ok &= (cnt_d == 0) | (
-                        layers_ext[np.where(dst_first >= 0, dst_first, n)]
-                        == layers_ext[item_safe]
+                        row_lookup(
+                            ltab, np.where(dst_first >= 0, dst_first, sentinel)
+                        )
+                        == row_lookup(ltab, item_safe)
                     )
-                full = cnt_d >= cap
-                j = np.minimum(
+                full = cnt_d >= caps_r
+                jd = np.minimum(
                     (u[3] * cnt_d).astype(np.int64), np.maximum(cnt_d - 1, 0)
                 )
-                other = items[ci, dst, j]
+                other = items[ri, dst, jd]
                 swap = ok & full
                 if self.intra_layer:
-                    src_first = items[ci, src, 0]
+                    src_first = items[ri, src, 0]
                     swap &= (
-                        layers_ext[np.where(other >= 0, other, n)]
-                        == layers_ext[np.where(src_first >= 0, src_first, n)]
+                        row_lookup(ltab, np.where(other >= 0, other, sentinel))
+                        == row_lookup(
+                            ltab, np.where(src_first >= 0, src_first, sentinel)
+                        )
                     )
                 move = ok & ~full
                 applied = move | swap
                 # full-row snapshots make rollback a pure scatter
                 snaps.append(
                     (src, dst, applied,
-                     items[ci, src], items[ci, dst], cnt_s, cnt_d)
+                     items[ri, src], items[ri, dst], cnt_s, cnt_d)
                 )
                 idx = np.flatnonzero(swap)
                 if idx.size:
-                    items[idx, dst[idx], j[idx]] = item[idx]
+                    items[idx, dst[idx], jd[idx]] = item[idx]
                     items[idx, src[idx], item_k[idx]] = other[idx]
                 idx = np.flatnonzero(move)
                 if idx.size:
@@ -585,15 +683,19 @@ class SimulatedAnnealingPacker:
                     entry_ok[:, a] &= ~(
                         entry_ok[:, b] & (tslots[:, a] == tslots[:, b])
                     )
-            # --- fused delta-cost step over every chain at once
+            # --- fused delta-cost step over every chain of every problem
             sel = np.where(entry_ok, tslots, 0)
-            rows = ci[:, None]
+            rows = ri[:, None]
             old_w = np.where(entry_ok, bw[rows, sel], 0).astype(np.int32)
             old_h = np.where(entry_ok, bh[rows, sel], 0).astype(np.int32)
-            slot_items = items[rows, sel, :]  # (C, width, cap)
-            ids = np.where(slot_items >= 0, slot_items, n)
-            new_w = np.where(entry_ok, widths_ext[ids].max(-1), 0).astype(np.int32)
-            new_h = np.where(entry_ok, depths_ext[ids].sum(-1), 0).astype(np.int32)
+            slot_items = items[rows, sel, :]  # (R, width, cap_max)
+            ids = np.where(slot_items >= 0, slot_items, sentinel)
+            new_w = np.where(
+                entry_ok, row_lookup(wtab, ids).max(-1), 0
+            ).astype(np.int32)
+            new_h = np.where(
+                entry_ok, row_lookup(dtab, ids).sum(-1), 0
+            ).astype(np.int32)
             if hetero:
                 old_k = np.where(entry_ok, bk[rows, sel], 0).astype(np.int32)
                 new_k = np.where(entry_ok, bk_new[rows, sel], 0).astype(np.int32)
@@ -601,12 +703,13 @@ class SimulatedAnnealingPacker:
                     old_w, old_h, new_w, new_h, backend=backend,
                     interpret=interpret, old_k=old_k, new_k=new_k, kind_tables=kt,
                 )
-                if prob._any_bounded:
-                    # inventory-penalty delta, vectorized over all chains:
-                    # the per-kind primitive usage change of the touched slots
-                    po = prob.bin_primitives_many(old_w, old_h, old_k)
-                    pn = prob.bin_primitives_many(new_w, new_h, new_k)
-                    dUK = np.zeros((n_chains, n_kinds), dtype=np.int64)
+                if any_bounded:
+                    # inventory-penalty delta, vectorized over all rows: the
+                    # per-kind primitive usage change of the touched slots
+                    # (mode tables are fleet-shared; counts are per problem)
+                    po = probs[0].bin_primitives_many(old_w, old_h, old_k)
+                    pn = probs[0].bin_primitives_many(new_w, new_h, new_k)
+                    dUK = np.zeros((n_rows, n_kinds), dtype=np.int64)
                     for kk in range(n_kinds):
                         dUK[:, kk] = ((new_k == kk) * pn).sum(1) - (
                             (old_k == kk) * po
@@ -622,9 +725,12 @@ class SimulatedAnnealingPacker:
                     backend=backend, interpret=interpret,
                 )
                 d_tot = d_e
-            # --- Metropolis acceptance, batched
+            # --- Metropolis acceptance: per-problem draws, one batched rule
             temps = t0s / (1.0 + self.rc * it)
-            accept = metropolis_mask(d_tot, temps, master.random(n_chains)) & active
+            for j in np.flatnonzero(act_p):
+                lo = j * n_chains
+                u_metro[lo : lo + n_chains] = rngs[j].random(n_chains)
+            accept = metropolis_mask(d_tot, temps, u_metro) & active
             # --- roll back rejected chains (reverse move order)
             reject = ~accept
             for m in range(n_moves - 1, -1, -1):
@@ -652,44 +758,54 @@ class SimulatedAnnealingPacker:
             else:
                 pcosts = costs
             uphill = active & (d_tot > 0)
-            uphill_prop += int(np.count_nonzero(uphill))
-            uphill_acc += int(np.count_nonzero(uphill & accept))
+            up_prop += uphill.reshape(n_probs, n_chains).sum(axis=1)
+            up_acc += (uphill & accept).reshape(n_probs, n_chains).sum(axis=1)
             # --- per-chain best / patience bookkeeping
             steps += active
             improved = active & (pcosts < best_pcosts)
             best_pcosts = np.where(improved, pcosts, best_pcosts)
             stale = np.where(improved, 0, np.where(active, stale + 1, stale))
-            bi = int(np.argmin(pcosts))
-            if pcosts[bi] < gbest_pcost:
-                gbest_pcost = pcosts[bi]
-                gbest_cost = int(costs[bi])
-                g_items[:] = items[bi]
-                g_counts[:] = counts[bi]
-                g_live = int(live[bi])
+            # --- per-problem global-best tracking
+            bi = pcosts.reshape(n_probs, n_chains).argmin(axis=1) + poff
+            for j in np.flatnonzero(pcosts[bi] < gbest_pcost):
+                r = bi[j]
+                gbest_pcost[j] = pcosts[r]
+                gbest_cost[j] = costs[r]
+                g_items[j] = items[r]
+                g_counts[j] = counts[r]
+                g_live[j] = live[r]
                 if hetero:
-                    g_kinds[:] = bk[bi]
-                    g_UK[:] = UK[bi]
-                trace.append((time.perf_counter() - t_start,
-                              float(gbest_pcost) if hetero else gbest_cost))
-            # --- periodic best-chain exchange + live-window compaction
+                    g_kinds[j] = bk[r]
+                    g_UK[j] = UK[r]
+                traces[j].append((
+                    time.perf_counter() - t_start,
+                    float(gbest_pcost[j]) if hetero else int(gbest_cost[j]),
+                ))
+            # --- periodic per-problem best-chain exchange + compaction
+            # (gated on the loop-top activity mask: a frozen problem's
+            # standalone run has already exited its loop, so reviving it
+            # here — stale[r] = 0 — would draw RNG the standalone run never
+            # draws and break the fleet parity contract)
             if self.exchange_every > 0 and (it + 1) % self.exchange_every == 0:
-                worst = int(np.argmax(pcosts))
-                if pcosts[worst] > gbest_pcost:
-                    items[worst] = g_items
-                    counts[worst] = g_counts
-                    live[worst] = g_live
-                    ids = np.where(g_items >= 0, g_items, n)
-                    bw[worst] = widths_ext[ids].max(-1)
-                    bh[worst] = depths_ext[ids].sum(-1)
-                    costs[worst] = gbest_cost
+                worst = pcosts.reshape(n_probs, n_chains).argmax(axis=1) + poff
+                for j in np.flatnonzero((pcosts[worst] > gbest_pcost) & act_p):
+                    r = worst[j]
+                    items[r] = g_items[j]
+                    counts[r] = g_counts[j]
+                    live[r] = g_live[j]
+                    ids = np.where(g_items[j] >= 0, g_items[j], sentinel)
+                    wt = wtab if wtab.ndim == 1 else wtab[j]
+                    dt = dtab if dtab.ndim == 1 else dtab[j]
+                    bw[r] = wt[ids].max(-1)
+                    bh[r] = dt[ids].sum(-1)
+                    costs[r] = gbest_cost[j]
                     if hetero:
-                        bk[worst] = g_kinds
-                        UK[worst] = g_UK
-                        pcosts = costs + lam * ovf_rows(UK)
-                        best_pcosts[worst] = min(best_pcosts[worst], gbest_pcost)
-                    else:
-                        best_pcosts[worst] = min(int(best_pcosts[worst]), gbest_cost)
-                    stale[worst] = 0
+                        bk[r] = g_kinds[j]
+                        UK[r] = g_UK[j]
+                    best_pcosts[r] = min(best_pcosts[r], gbest_pcost[j])
+                    stale[r] = 0
+                if hetero:
+                    pcosts = costs + lam * ovf_rows(UK)
                 order = np.argsort(counts == 0, axis=1, kind="stable")
                 items = np.take_along_axis(items, order[:, :, None], 1)
                 counts = np.take_along_axis(counts, order, 1)
@@ -700,21 +816,29 @@ class SimulatedAnnealingPacker:
                 live = (counts > 0).sum(1)
             it += 1
         wall = time.perf_counter() - t_start
-        chains = [
-            decode_chain_items(
-                prob, items[c], counts[c], bk[c] if hetero else None
+        outs: list[_BlockOut] = []
+        for j in range(n_probs):
+            lo = j * n_chains
+            chains = [
+                decode_chain_items(
+                    probs[j], items[r], counts[r], bk[r] if hetero else None
+                )
+                for r in range(lo, lo + n_chains)
+            ]
+            gbest = decode_chain_items(
+                probs[j], g_items[j], g_counts[j], g_kinds[j] if hetero else None
             )
-            for c in range(n_chains)
-        ]
-        gbest = decode_chain_items(
-            prob, g_items, g_counts, g_kinds if hetero else None
-        )
-        self.last_solution_ = chains[int(np.argmin(pcosts))]
-        self.last_chains_ = chains
-        return self._result(
-            gbest, gbest_cost, wall, trace, int(steps.sum()), backend,
-            uphill=(uphill_prop, uphill_acc),
-        )
+            outs.append(_BlockOut(
+                best=gbest,
+                best_cost=int(gbest_cost[j]),
+                trace=traces[j],
+                iterations=int(steps[lo : lo + n_chains].sum()),
+                chains=chains,
+                incumbent=int(pcosts[lo : lo + n_chains].argmin()),
+                uphill=(int(up_prop[j]), int(up_acc[j])),
+                wall=wall,
+            ))
+        return outs
 
     # ------------------------------------------------------------------ result
     def _result(self, best, best_cost, wall, trace, iterations, backend, uphill):

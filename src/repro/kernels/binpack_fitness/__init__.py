@@ -1,3 +1,10 @@
+"""Batched bin-cost fitness kernel (GA generations, DSE fleets).
+
+`ops.population_costs` reduces padded (P, NB) — or, with a leading problem
+axis, (NP, P, NB) — bin-geometry matrices to per-individual totals in one
+call; see docs/DESIGN.md section 10 for the batching axes and the
+padding/masking contract.
+"""
 from .kernel import (  # noqa: F401
     binpack_fitness_kinds_pallas,
     binpack_fitness_pallas,

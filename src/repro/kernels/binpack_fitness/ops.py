@@ -48,7 +48,28 @@ def population_costs(
     ``kinds`` (a (P, NB) int matrix of RAM-kind indices) together with
     ``kind_tables`` routes evaluation through per-kind mode tables; without
     them the single mode set ``modes`` applies to every bin.
+
+    A leading *problem axis* is also accepted on every backend:
+    ``(NP, P, NB)`` inputs return ``(NP, P)`` totals, evaluating a whole
+    fleet of padded problems in one call (the DSE sweep path —
+    docs/DESIGN.md section 10).  Padded lanes are masked by the zero-width
+    convention: a padded bin slot (or an entirely padded problem row) has
+    width 0 and costs nothing.
     """
+    widths = jnp.asarray(widths)
+    heights = jnp.asarray(heights)
+    if widths.ndim == 3:
+        np_, p_, nb_ = widths.shape
+        totals = population_costs(
+            widths.reshape(np_ * p_, nb_),
+            heights.reshape(np_ * p_, nb_),
+            modes=modes,
+            backend=backend,
+            interpret=interpret,
+            kinds=None if kinds is None else jnp.asarray(kinds).reshape(np_ * p_, nb_),
+            kind_tables=kind_tables,
+        )
+        return totals.reshape(np_, p_)
     if backend == "auto":
         if jax.default_backend() == "tpu":
             backend, interpret = "pallas", False

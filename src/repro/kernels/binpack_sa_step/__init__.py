@@ -1,1 +1,8 @@
+"""Fused SA step kernel: delta costs + the Metropolis rule.
+
+`ops.sa_step_deltas` reduces padded (C, T) — or, with a leading problem
+axis, (NP, C, T) — touched-bin geometry to per-chain integer cost deltas;
+see docs/DESIGN.md section 10 for the batching axes and the padding/masking
+contract.
+"""
 from .ops import metropolis_mask, sa_step_deltas  # noqa: F401

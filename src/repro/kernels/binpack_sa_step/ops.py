@@ -69,9 +69,24 @@ def sa_step_deltas(
     ``kind_tables`` (``(weight, modes)`` per kind): each slot is then costed
     on its own mode table, so a kind flip (same geometry, different kind) is
     just another delta.  All backends stay exact-integer and bit-identical.
+
+    A leading *problem axis* is also accepted on every backend:
+    ``(NP, C, T)`` inputs return ``(NP, C)`` deltas — one fused call for a
+    fleet of padded problems' chain blocks (the DSE sweep path —
+    docs/DESIGN.md section 10).  Padded problems are masked by the same
+    zero-width convention as padded slots.
     """
     if backend == "auto":
         backend, interpret = resolve_auto()
+    if np.ndim(old_w) == 3:
+        np_, c_, t_ = np.shape(old_w)
+        flat = lambda a: None if a is None else np.reshape(np.asarray(a), (np_ * c_, t_))  # noqa: E731
+        out = sa_step_deltas(
+            flat(old_w), flat(old_h), flat(new_w), flat(new_h),
+            modes=modes, backend=backend, interpret=interpret,
+            old_k=flat(old_k), new_k=flat(new_k), kind_tables=kind_tables,
+        )
+        return out.reshape(np_, c_)
     hetero = old_k is not None
     if hetero:
         if new_k is None or kind_tables is None:

@@ -149,3 +149,55 @@ def test_sequence_packing_invariants(doc_lengths, card):
     for s in seqs:
         assert sum(doc_lengths[i] for i in s) <= seq_len
         assert len(s) <= card
+
+
+@st.composite
+def problem_fleets(draw):
+    """Randomly sized fleets sharing one cost model (single- or two-kind)."""
+    from repro.core.problem import BRAM18, URAM288, OCMInventory
+
+    hetero = draw(st.booleans())
+    fleet = []
+    for _ in range(draw(st.integers(1, 5))):
+        n = draw(st.integers(1, 25))
+        bufs = [
+            c.Buffer(
+                width=draw(st.integers(1, 80)),
+                depth=draw(st.integers(1, 40_000)),
+                layer=draw(st.integers(0, 4)),
+            )
+            for _ in range(n)
+        ]
+        ocm = (
+            OCMInventory(
+                (BRAM18, URAM288),
+                (draw(st.integers(-1, 500)), draw(st.integers(-1, 64))),
+            )
+            if hetero
+            else None
+        )
+        fleet.append(
+            c.PackingProblem(bufs, max_items=draw(st.integers(1, 6)), ocm=ocm)
+        )
+    return fleet
+
+
+@settings(max_examples=40, deadline=None)
+@given(problem_fleets())
+def test_problem_batch_codec_round_trip(fleet):
+    """encode_problem_batch/decode_problem_batch round-trips arbitrary
+    fleets: geometry, layers, cardinality, kinds, counts, fingerprints."""
+    from repro.core.problem import decode_problem_batch, encode_problem_batch
+
+    batch = encode_problem_batch(fleet)
+    assert batch.size == len(fleet)
+    assert batch.n_max == max(p.n for p in fleet)
+    back = decode_problem_batch(batch)
+    for a, b in zip(fleet, back):
+        np.testing.assert_array_equal(a.widths, b.widths)
+        np.testing.assert_array_equal(a.depths, b.depths)
+        np.testing.assert_array_equal(a.layers, b.layers)
+        assert a.max_items == b.max_items
+        assert a.kind_tables == b.kind_tables
+        assert a.kind_counts == b.kind_counts
+        assert a.fingerprint() == b.fingerprint()

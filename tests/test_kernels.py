@@ -181,3 +181,50 @@ def test_packed_gather_split_outputs(rng):
     y = bank_matvec(bank, x, seg, backend="ref")
     parts = split_outputs(y, seg, n)
     assert sum(p.shape[0] for p in parts) == r
+
+
+@pytest.mark.parametrize("backend", ["python", "ref", "pallas"])
+def test_problem_axis_matches_per_problem_slices(backend, rng):
+    """The leading problem axis (NP, ., .) must equal stacking the 2-D calls
+    per problem on every backend, for both kernels (DSE fleet contract)."""
+    if backend != "python":
+        npb, p, nb = 3, 4, 17
+        w = rng.integers(0, 80, (npb, p, nb)).astype(np.int32)
+        w[rng.random((npb, p, nb)) < 0.3] = 0
+        h = np.where(w > 0, rng.integers(1, 60_000, (npb, p, nb)), 0).astype(np.int32)
+        t3 = np.asarray(
+            population_costs(jnp.asarray(w), jnp.asarray(h), backend=backend)
+        )
+        assert t3.shape == (npb, p)
+        per = np.stack([
+            np.asarray(population_costs(jnp.asarray(w[i]), jnp.asarray(h[i]),
+                                        backend=backend))
+            for i in range(npb)
+        ])
+        np.testing.assert_array_equal(t3, per)
+    npb, cc, t = 3, 5, 4
+    ow = rng.integers(0, 80, (npb, cc, t)).astype(np.int32)
+    oh = np.where(ow > 0, rng.integers(1, 60_000, (npb, cc, t)), 0).astype(np.int32)
+    nw = rng.integers(0, 80, (npb, cc, t)).astype(np.int32)
+    nh = np.where(nw > 0, rng.integers(1, 60_000, (npb, cc, t)), 0).astype(np.int32)
+    d3 = sa_step_deltas(ow, oh, nw, nh, backend=backend)
+    assert d3.shape == (npb, cc)
+    per = np.stack([
+        sa_step_deltas(ow[i], oh[i], nw[i], nh[i], backend=backend)
+        for i in range(npb)
+    ])
+    np.testing.assert_array_equal(d3, per)
+    # kind lanes ride the problem axis too
+    from repro.core.problem import BRAM18, URAM288
+
+    kt = ((1, BRAM18.modes), (16, URAM288.modes))
+    ok = rng.integers(0, 2, (npb, cc, t)).astype(np.int32)
+    nk = rng.integers(0, 2, (npb, cc, t)).astype(np.int32)
+    dk3 = sa_step_deltas(ow, oh, nw, nh, backend=backend,
+                         old_k=ok, new_k=nk, kind_tables=kt)
+    perk = np.stack([
+        sa_step_deltas(ow[i], oh[i], nw[i], nh[i], backend=backend,
+                       old_k=ok[i], new_k=nk[i], kind_tables=kt)
+        for i in range(npb)
+    ])
+    np.testing.assert_array_equal(dk3, perk)

@@ -1,0 +1,95 @@
+#!/usr/bin/env python
+"""Docs integrity checker: fail CI on broken references in the markdown.
+
+Scans ``README.md`` and ``docs/*.md`` for three kinds of references and
+verifies each against the working tree:
+
+1. Relative markdown links ``[text](path)`` (external schemes and pure
+   ``#anchor`` links are skipped; a ``path#anchor`` has its anchor
+   stripped) — the target file or directory must exist.
+2. Backticked repo paths — any `` `a/b.ext` `` with a known source/doc
+   extension — must exist.  Paths under gitignored output directories
+   (``benchmarks/out/``) are exempt: they name artifacts benchmarks
+   produce, not tracked files.
+3. Backticked dotted module references starting with ``repro.`` — the
+   longest importable prefix must resolve to a module file or package
+   under ``src/`` (trailing attribute/function parts are allowed, e.g.
+   ``repro.core.api.pack``).
+
+Run from the repository root (CI does):
+
+    python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+CHECKED_EXTS = (".py", ".md", ".yml", ".yaml", ".txt", ".toml", ".ini", ".csv")
+OUTPUT_DIRS = ("benchmarks/out/",)
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+TICKED = re.compile(r"`([^`\n]+)`")
+MODULE_REF = re.compile(r"^repro(\.\w+)+$")
+
+
+def _module_resolves(ref: str) -> bool:
+    parts = ref.split(".")
+    # longest prefix that is a module/package wins; tails are attributes
+    for k in range(len(parts), 1, -1):
+        base = ROOT / "src" / Path(*parts[:k])
+        if base.with_suffix(".py").is_file() or (base / "__init__.py").is_file():
+            return True
+    return False
+
+
+def check_file(md: Path) -> list[str]:
+    errors: list[str] = []
+    text = md.read_text()
+    for lineno, line in enumerate(text.splitlines(), 1):
+        for target in MD_LINK.findall(line):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (md.parent / rel).exists() and not (ROOT / rel).exists():
+                errors.append(f"{md.relative_to(ROOT)}:{lineno}: "
+                              f"broken link target {target!r}")
+        for ref in TICKED.findall(line):
+            ref = ref.strip()
+            if MODULE_REF.match(ref):
+                if not _module_resolves(ref):
+                    errors.append(f"{md.relative_to(ROOT)}:{lineno}: "
+                                  f"unresolvable module reference {ref!r}")
+                continue
+            if "/" in ref and ref.endswith(CHECKED_EXTS) and " " not in ref:
+                if any(ref.startswith(d) for d in OUTPUT_DIRS):
+                    continue
+                if not (ROOT / ref).exists():
+                    errors.append(f"{md.relative_to(ROOT)}:{lineno}: "
+                                  f"missing repo path {ref!r}")
+    return errors
+
+
+def main() -> int:
+    files = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    errors: list[str] = []
+    n_refs = 0
+    for md in files:
+        if md.exists():
+            errors.extend(check_file(md))
+            n_refs += 1
+    if errors:
+        print(f"docs check FAILED ({len(errors)} broken reference(s)):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"docs check OK ({n_refs} file(s) scanned)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
