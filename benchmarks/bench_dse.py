@@ -28,9 +28,11 @@ import repro.core as c
 from .common import emit
 
 
-def _fleet(quick: bool):
+def _fleet(quick: bool, smoke: bool = False):
     names = (
-        ["CNV-W1A1", "CNV-W2A2", "Tincy-YOLO", "RN50-W1A2"]
+        ["CNV-W1A1", "CNV-W2A2"]
+        if smoke
+        else ["CNV-W1A1", "CNV-W2A2", "Tincy-YOLO", "RN50-W1A2"]
         if quick
         else list(c.ACCELERATORS)
     )
@@ -43,9 +45,15 @@ def _fleet(quick: bool):
     return probs, seeds
 
 
-def run(quick: bool = False, n_chains: int = 8, iterations: int | None = None):
-    probs, seeds = _fleet(quick)
-    iters = iterations if iterations is not None else (1200 if quick else 2500)
+def run(quick: bool = False, n_chains: int = 8, iterations: int | None = None,
+        smoke: bool = False):
+    if smoke:
+        n_chains = min(n_chains, 4)
+    probs, seeds = _fleet(quick, smoke)
+    iters = (
+        iterations if iterations is not None
+        else (80 if smoke else 1200 if quick else 2500)
+    )
     kw = dict(
         max_seconds=1e9, patience=10**9, max_iterations=iters,
         backend="python", n_chains=n_chains,
@@ -93,14 +101,15 @@ def run(quick: bool = False, n_chains: int = 8, iterations: int | None = None):
     emit("dse_candidates", header2, rows2)
 
     # ----------------------------------------------------------------- cache
+    cache_iters = 40 if smoke else 200 if quick else 400
     cache: dict = {}
     t0 = time.perf_counter()
     first = c.pack_sweep(probs, "sa-s", seeds=seeds, cache=cache,
-                         **{**kw, "max_iterations": 200 if quick else 400})
+                         **{**kw, "max_iterations": cache_iters})
     t_first = time.perf_counter() - t0
     t0 = time.perf_counter()
     second = c.pack_sweep(probs, "sa-s", seeds=seeds, cache=cache,
-                          **{**kw, "max_iterations": 200 if quick else 400})
+                          **{**kw, "max_iterations": cache_iters})
     t_second = time.perf_counter() - t0
     header3 = ["sweep", "wall_s", "candidates_per_sec", "solved", "cache_hits"]
     rows3 = [

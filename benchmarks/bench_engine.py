@@ -33,6 +33,19 @@ SA tables (``run_sa``):
   equal-or-better while being >= 10x on RN152-W1A2).
 * ``sa_cost_vs_time`` — the best-cost-so-far trace of each long run, for
   cost-vs-wall-time convergence plots.
+
+Portfolio table (``run_portfolio``):
+
+* ``portfolio_throughput`` — the fleet-native island portfolio vs the
+  legacy thread-pool portfolio at an identical wall budget and island
+  lineup: aggregate island iterations/sec (SA steps + GA generations per
+  wall second, summed over islands) and the final cost.  The fleet engine
+  must be >= 2x aggregate throughput at equal-or-better cost on
+  RN152-W1A2 — and, unlike the thread version, it is bit-reproducible.
+
+Every ``run*`` entry point takes ``smoke=True`` (used by
+``benchmarks/run.py --smoke``) to finish in a few seconds on a tiny
+problem — an execution check, not a measurement.
 """
 from __future__ import annotations
 
@@ -40,6 +53,7 @@ import time
 
 import repro.core as c
 from repro.core.ga import GeneticPacker
+from repro.core.portfolio import pack_portfolio_threads
 from repro.core.sa import SimulatedAnnealingPacker
 
 from .common import BUDGETS, emit
@@ -65,15 +79,17 @@ def _timed_pack(prob, hp, backend, seconds=None, gens=None, seed=0):
     return result, time.perf_counter() - t0
 
 
-def run(accelerators=None, gens=None, budgets=None, quick=False):
+def run(accelerators=None, gens=None, budgets=None, quick=False, smoke=False):
     if accelerators is None:
         accelerators = (
-            ["CNV-W1A1", "RN152-W1A2"]
+            ["CNV-W1A1"]
+            if smoke
+            else ["CNV-W1A1", "RN152-W1A2"]
             if quick
             else ["CNV-W1A1", "Tincy-YOLO", "DoReFaNet", "RN50-W1A2", "RN152-W1A2"]
         )
-    t_warm, t_full = (0.4, 1.6) if quick else (1.0, 5.0)
-    g_parity = gens if gens is not None else (25 if quick else 110)
+    t_warm, t_full = (0.15, 0.5) if smoke else (0.4, 1.6) if quick else (1.0, 5.0)
+    g_parity = gens if gens is not None else (5 if smoke else 25 if quick else 110)
     budgets = budgets or BUDGETS
 
     # ---------------------------------------------------------- throughput
@@ -118,13 +134,14 @@ def run(accelerators=None, gens=None, budgets=None, quick=False):
     for name in accelerators:
         prob = c.get_problem(name)
         hp = c.hyperparams(name)
-        budget = max(2, budgets[name] // (4 if quick else 2))
+        budget = 1 if smoke else max(2, budgets[name] // (4 if quick else 2))
         for engine, backend in (("ga-nfd-legacy", "legacy"), ("ga-nfd", "auto")):
             r = c.pack(prob, "ga-nfd", seed=0, max_seconds=budget, backend=backend, **hp)
             r.solution.validate()
             rows2.append([name, engine, r.cost, round(r.time_to_within(0.01), 2), budget])
         r = c.pack_portfolio(
-            prob, n_islands=2 if quick else 4, seed=0, max_seconds=budget, **hp
+            prob, n_islands=2 if (quick or smoke) else 4, seed=0,
+            max_seconds=budget, **hp
         )
         r.solution.validate()
         rows2.append(
@@ -135,7 +152,8 @@ def run(accelerators=None, gens=None, budgets=None, quick=False):
 
 
 # ------------------------------------------------------------ heterogeneous
-def run_hetero(accelerators=None, device="U50", quick=False, budget_s=None):
+def run_hetero(accelerators=None, device="U50", quick=False, budget_s=None,
+               smoke=False):
     """BRAM18-only vs heterogeneous device packing of the same workloads.
 
     Costs are in the device's inventory units (1 unit = 1 BRAM18 worth of
@@ -147,11 +165,16 @@ def run_hetero(accelerators=None, device="U50", quick=False, budget_s=None):
 
     if accelerators is None:
         accelerators = (
-            ["CNV-W1A1", "RN152-W1A2"]
+            ["CNV-W1A1"]
+            if smoke
+            else ["CNV-W1A1", "RN152-W1A2"]
             if quick
             else ["RN50-W1A2", "RN101-W1A2", "RN152-W1A2"]
         )
-    budget = budget_s if budget_s is not None else (3.0 if quick else 10.0)
+    if budget_s is not None:
+        budget = budget_s
+    else:
+        budget = 0.5 if smoke else 3.0 if quick else 10.0
     header = [
         "accelerator", "device", "scenario", "cost_units", "overflow_units",
         "penalized", "efficiency_pct", "feasible", "used_bram18", "used_uram288",
@@ -208,20 +231,24 @@ def _timed_sa(prob, backend, n_chains, seconds, seed=0):
     return result, time.perf_counter() - t0
 
 
-def run_sa(accelerators=None, quick=False, n_chains=32):
+def run_sa(accelerators=None, quick=False, n_chains=32, smoke=False):
     """SA-S engine: aggregate chain-iterations/sec + cost-vs-time traces.
 
     Rates are taken between a short warm run and a long run (cancelling
     chain-init and jit/interpret warmup); ``legacy`` is the scalar loop
     with its single chain, the batched backends run ``n_chains`` chains.
     """
+    if smoke:
+        n_chains = min(n_chains, 4)
     if accelerators is None:
         accelerators = (
-            ["CNV-W1A1", "RN152-W1A2"]
+            ["CNV-W1A1"]
+            if smoke
+            else ["CNV-W1A1", "RN152-W1A2"]
             if quick
             else ["CNV-W1A1", "Tincy-YOLO", "RN50-W1A2", "RN152-W1A2"]
         )
-    t_warm, t_full = (0.5, 2.0) if quick else (1.0, 5.0)
+    t_warm, t_full = (0.15, 0.5) if smoke else (0.5, 2.0) if quick else (1.0, 5.0)
     header = [
         "accelerator", "backend", "n_chains", "chain_iters_per_sec",
         "speedup_vs_legacy", "cost",
@@ -263,3 +290,60 @@ def run_sa(accelerators=None, quick=False, n_chains=32):
     emit("sa_cost_vs_time", ["accelerator", "backend", "t_s", "best_cost"],
          curve_rows)
     return rows, curve_rows
+
+
+# -------------------------------------------------------------- portfolio
+def run_portfolio(accelerator=None, quick=False, smoke=False, seed=0,
+                  n_islands=4, sa_chains=8, budget_s=None):
+    """Fleet-native island portfolio vs the legacy thread-pool portfolio.
+
+    Identical island lineup and wall budget per scenario; the metric is
+    *aggregate island iterations/sec* — SA chain-iterations plus GA
+    generations summed over every island, divided by the run's wall time.
+
+    The headline ``sa-fleet`` scenario runs K multi-chain ``sa-s`` islands:
+    the thread pool runs K batched annealers in K GIL-sharing threads,
+    while the fleet engine folds them into ONE `_anneal_block` array
+    program of ``K x sa_chains`` problem-major rows — same-problem
+    replication through the cross-problem fleet core, which amortizes the
+    fixed per-step overhead K ways.  That scenario must clear >= 2x the
+    thread pool's aggregate throughput on RN152-W1A2 at an equal-or-better
+    final cost — while additionally being bit-reproducible (the thread
+    version's wall-clock rounds depend on machine speed).  The ``mixed``
+    scenario reports the default GA+SA+SA-NFD lineup for the same
+    comparison (its pace is bounded by the scalar engines on both sides).
+    """
+    name = accelerator or ("CNV-W1A1" if smoke else "RN152-W1A2")
+    budget = budget_s if budget_s is not None else (
+        1.0 if smoke else 4.0 if quick else 12.0
+    )
+    prob = c.get_problem(name)
+    hp = c.hyperparams(name)
+    header = [
+        "accelerator", "scenario", "engine", "islands", "budget_s",
+        "island_iters", "agg_iters_per_sec", "speedup_vs_threads", "cost",
+        "cost_delta_vs_threads",
+    ]
+    rows = []
+    for scenario, algorithms in (
+        ("sa-fleet", ("sa-s",)),
+        ("mixed", ("ga-nfd", "sa-s", "sa-nfd")),
+    ):
+        kw = dict(
+            n_islands=n_islands, algorithms=algorithms, seed=seed,
+            max_seconds=budget, sa_chains=sa_chains, **hp,
+        )
+        # thread engine first: its wall-clock rounds are the baseline
+        rt = pack_portfolio_threads(prob, **kw)
+        rt.solution.validate()
+        rf = c.pack_portfolio(prob, **kw)
+        rf.solution.validate()
+        ips_t = rt.iterations / max(rt.wall_time_s, 1e-9)
+        for label, r in (("threads", rt), ("fleet", rf)):
+            ips = r.iterations / max(r.wall_time_s, 1e-9)
+            rows.append([
+                name, scenario, label, n_islands, budget, r.iterations,
+                round(ips), round(ips / ips_t, 2), r.cost, r.cost - rt.cost,
+            ])
+    emit("portfolio_throughput", header, rows)
+    return rows

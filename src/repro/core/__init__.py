@@ -21,11 +21,16 @@ from .api import ALGORITHMS, make_packer, pack, pack_sweep  # noqa: F401
 from .dse import SweepResult  # noqa: F401
 from .ga import GeneticPacker, buffer_swap, kind_reassign  # noqa: F401
 from .nfd import nfd_from_scratch, nfd_pack_order, nfd_repack  # noqa: F401
-from .portfolio import IslandSpec, pack_portfolio  # noqa: F401
+from .portfolio import (  # noqa: F401
+    IslandSpec,
+    pack_portfolio,
+    pack_portfolio_threads,
+)
 from .problem import (  # noqa: F401
     BRAM18,
     BRAM18_CAPACITY_BITS,
     BRAM18_MODES,
+    DEFAULT_INVENTORY_PENALTY,
     BRAM36,
     BRAMSpec,
     Buffer,

@@ -8,7 +8,12 @@ import numpy as np
 from . import baselines
 from .dse import SweepResult, pack_sweep  # noqa: F401  (re-export)
 from .ga import GeneticPacker
-from .problem import PackingProblem, PackingResult, Solution
+from .problem import (
+    DEFAULT_INVENTORY_PENALTY,
+    PackingProblem,
+    PackingResult,
+    Solution,
+)
 from .sa import SimulatedAnnealingPacker
 
 ALGORITHMS = (
@@ -75,7 +80,9 @@ def make_packer(
             seed=seed,
             backend=backend,
             p_kind=hyper.get("p_kind", 0.25),
-            inventory_penalty=hyper.get("inventory_penalty", 32.0),
+            inventory_penalty=hyper.get(
+                "inventory_penalty", DEFAULT_INVENTORY_PENALTY
+            ),
         )
     if algorithm in ("sa-nfd", "sa-s"):
         return SimulatedAnnealingPacker(
@@ -99,7 +106,9 @@ def make_packer(
             ladder_min=hyper.get("ladder_min", 0.25),
             ladder_max=hyper.get("ladder_max", 4.0),
             p_kind=hyper.get("p_kind", 0.15),
-            inventory_penalty=hyper.get("inventory_penalty", 32.0),
+            inventory_penalty=hyper.get(
+                "inventory_penalty", DEFAULT_INVENTORY_PENALTY
+            ),
         )
     raise ValueError(f"no evolutionary packer named {algorithm!r}")
 
@@ -149,6 +158,10 @@ def pack(
         )
         return packer.pack(prob)
     if algorithm == "portfolio":
+        # the fleet-native island portfolio: deterministic per seed, with
+        # migration at iteration/generation barriers (``migration_every``
+        # counts iterations, not seconds; the legacy thread knob
+        # ``max_workers`` is deprecated and ignored)
         from .portfolio import pack_portfolio
 
         return pack_portfolio(

@@ -48,7 +48,7 @@ from typing import Sequence
 
 import numpy as np
 
-from .ga import GeneticPacker
+from .ga import lockstep_generation, stacked_population_costs
 from .problem import (
     PackingProblem,
     PackingResult,
@@ -168,29 +168,6 @@ def _group_by_cost_model(indices, problems) -> list[list[int]]:
     return list(groups.values())
 
 
-def _stacked_ga_costs(runs, backend) -> np.ndarray:
-    """One leading-problem-axis fitness call over several GA runs.
-
-    Stacks each run's ``(n_pop, NB_j)`` geometry (and kind) matrices into a
-    zero-padded ``(A, n_pop, NB_max)`` block — padded lanes have width 0 and
-    cost nothing, so totals equal the per-run 2-D calls exactly.
-    """
-    nb = max(r.W.shape[1] for r in runs)
-    n_pop = runs[0].W.shape[0]
-    W = np.zeros((len(runs), n_pop, nb), dtype=np.int32)
-    H = np.zeros_like(W)
-    hetero = runs[0].Km is not None
-    Km = np.zeros_like(W) if hetero else None
-    for a, r in enumerate(runs):
-        W[a, :, : r.W.shape[1]] = r.W
-        H[a, :, : r.H.shape[1]] = r.H
-        if hetero:
-            Km[a, :, : r.Km.shape[1]] = r.Km
-    return GeneticPacker._batched_costs(
-        W, H, backend, Km, runs[0].kt, runs[0].modes0
-    )
-
-
 def _solve_sa_groups(packer, groups, problems, seeds, backend) -> dict[int, PackingResult]:
     out: dict[int, PackingResult] = {}
     for group in groups:
@@ -216,35 +193,15 @@ def _solve_ga_groups(packer, groups, problems, seeds, backend) -> dict[int, Pack
             )
             for i in group
         ]
-        totals = _stacked_ga_costs(runs, backend)
+        totals = stacked_population_costs(runs, backend)
         for run, tot in zip(runs, totals):
             packer._eval_init(run, tot)
-        live = list(runs)
-        while live:
-            advanced = []
-            pending = []  # (run, mutated) awaiting stacked fitness
-            for run in list(live):
-                if run.gen >= packer.max_generations:
-                    run.done = True
-                    live.remove(run)
-                    continue
-                run.gen += 1
-                now = time.perf_counter() - run.t0
-                if now > packer.max_seconds or run.stale >= packer.patience:
-                    run.done = True
-                    live.remove(run)
-                    continue
-                mutated = packer._mutation_phase(run)
-                advanced.append(run)
-                if mutated:
-                    pending.append((run, mutated))
-            if pending:
-                totals = _stacked_ga_costs([r for r, _ in pending], backend)
-                for (run, mutated), tot in zip(pending, totals):
-                    packer._apply_costs(run, tot, mutated)
-            for run in advanced:
-                packer._track_best(run)
-                packer._tournament(run)
+        # the shared lockstep driver (ga.lockstep_generation) advances every
+        # live run one generation per call with one stacked fitness call —
+        # the same helper the fleet-native portfolio barriers on
+        pairs = [(packer, run) for run in runs]
+        while lockstep_generation(pairs):
+            pass
         for i, run in zip(group, runs):
             packer.seed = seeds[i]  # per-problem seed lands in result params
             out[i] = packer._finish_run(run)

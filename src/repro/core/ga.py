@@ -46,7 +46,12 @@ from typing import Sequence
 import numpy as np
 
 from .nfd import nfd_from_scratch, nfd_repack
-from .problem import PackingProblem, PackingResult, Solution
+from .problem import (
+    DEFAULT_INVENTORY_PENALTY,
+    PackingProblem,
+    PackingResult,
+    Solution,
+)
 
 BACKENDS = ("auto", "python", "ref", "pallas", "legacy")
 
@@ -258,7 +263,7 @@ class GeneticPacker:
         seed: int = 0,
         backend: str = "auto",
         p_kind: float = 0.25,
-        inventory_penalty: float = 32.0,
+        inventory_penalty: float = DEFAULT_INVENTORY_PENALTY,
     ):
         if mutation not in ("nfd", "swap"):
             raise ValueError(f"unknown mutation {mutation!r}")
@@ -572,6 +577,46 @@ class GeneticPacker:
             ),
         )
 
+    def _migrate_in(self, run: "_GARun", sol: Solution) -> bool:
+        """Portfolio barrier hook: the migrant replaces this run's worst
+        individual (by penalized selection cost) iff strictly better.  A
+        finished run is never touched and ``stale`` is never reset, so
+        migration cannot revive a converged island."""
+        if run.done or run.stale >= self.patience:
+            return False
+        sel = (
+            run.costs
+            if run.ovfs is None
+            else run.costs + run.inv_pen * run.ovfs
+        )
+        worst = int(np.argmax(sel))
+        cost = float(sol.cost())
+        ovf = float(sol.inventory_overflow()) if run.ovfs is not None else 0.0
+        mig_sel = cost + run.inv_pen * ovf
+        if mig_sel >= float(sel[worst]):
+            return False
+        mig = sol.copy()
+        run.pop[worst] = mig
+        run.costs[worst] = cost
+        if run.ovfs is not None:
+            run.ovfs[worst] = ovf
+        run.fits[worst] = fitness(
+            mig, self.layer_weight, cost=cost, inventory_penalty=run.inv_pen,
+            overflow=None if run.ovfs is None else ovf,
+        )
+        if run.batched:
+            mig.fill_geometry(run.W[worst], run.H[worst])
+            if run.Km is not None:
+                mig.fill_kinds(run.Km[worst])
+        # fold the migrant into the best-tracking reference (no trace entry,
+        # no stale reset): otherwise the next _track_best would record the
+        # migrant as this run's own improvement and revive its patience
+        if mig_sel < run.best_sel:
+            run.best_sel = mig_sel
+            run.best_cost = int(cost)
+            run.best = mig.copy()
+        return True
+
     def pack(
         self, prob: PackingProblem, init_pop: Sequence[Solution] | None = None
     ) -> PackingResult:
@@ -600,10 +645,85 @@ class GeneticPacker:
         return self._finish_run(run)
 
 
+def stacked_population_costs(runs: Sequence["_GARun"], backend: str) -> np.ndarray:
+    """One leading-problem-axis fitness call over several GA runs.
+
+    Stacks each run's ``(n_pop, NB_j)`` geometry (and kind) matrices into a
+    zero-padded ``(A, n_pop, NB_max)`` block — padded lanes have width 0 and
+    cost nothing, so totals equal the per-run 2-D calls exactly.  Shared by
+    ``core.dse``'s sweep driver (many problems, one packer) and
+    ``core.portfolio``'s island driver (one problem, many packers).
+    """
+    nb = max(r.W.shape[1] for r in runs)
+    n_pop = runs[0].W.shape[0]
+    W = np.zeros((len(runs), n_pop, nb), dtype=np.int32)
+    H = np.zeros_like(W)
+    hetero = runs[0].Km is not None
+    Km = np.zeros_like(W) if hetero else None
+    for a, r in enumerate(runs):
+        W[a, :, : r.W.shape[1]] = r.W
+        H[a, :, : r.H.shape[1]] = r.H
+        if hetero:
+            Km[a, :, : r.Km.shape[1]] = r.Km
+    return GeneticPacker._batched_costs(
+        W, H, backend, Km, runs[0].kt, runs[0].modes0
+    )
+
+
+def lockstep_generation(
+    pairs: Sequence[tuple[GeneticPacker, "_GARun"]],
+    gen_limit: int | None = None,
+) -> bool:
+    """Advance ONE generation for every live (packer, run) pair in lockstep.
+
+    All batched pairs' mutated populations are evaluated in stacked
+    leading-problem-axis fitness calls (grouped by population size, via
+    :func:`stacked_population_costs`); each run consumes only its own RNG
+    stream, so every trajectory is bit-identical to the standalone
+    ``pack()`` loop.  ``gen_limit`` *pauses* runs that have reached a
+    portfolio barrier without marking them done; budget/patience/wall
+    exhaustion marks ``run.done``.  Returns True while any pair advanced.
+    """
+    advanced: list[tuple[GeneticPacker, _GARun]] = []
+    pending: list[tuple[GeneticPacker, _GARun, list[int]]] = []
+    for packer, run in pairs:
+        if run.done:
+            continue
+        if gen_limit is not None and run.gen >= gen_limit:
+            continue
+        if run.gen >= packer.max_generations:
+            run.done = True
+            continue
+        run.gen += 1
+        now = time.perf_counter() - run.t0
+        if now > packer.max_seconds or run.stale >= packer.patience:
+            run.done = True
+            continue
+        mutated = packer._mutation_phase(run)
+        advanced.append((packer, run))
+        if run.batched and mutated:
+            pending.append((packer, run, mutated))
+    if pending:
+        groups: dict[int, list] = {}
+        for entry in pending:
+            groups.setdefault(entry[1].W.shape[0], []).append(entry)
+        for group in groups.values():
+            totals = stacked_population_costs(
+                [r for _, r, _ in group], group[0][1].backend
+            )
+            for (packer, run, mutated), tot in zip(group, totals):
+                packer._apply_costs(run, tot, mutated)
+    for packer, run in advanced:
+        packer._track_best(run)
+        packer._tournament(run)
+    return bool(advanced)
+
+
 class _GARun:
     """One problem's GA state, advanced generation-wise by the phase helpers
-    of `GeneticPacker` (either its own `pack()` loop or `core.dse`'s
-    lockstep multi-problem driver)."""
+    of `GeneticPacker` (its own `pack()` loop, `core.dse`'s lockstep
+    multi-problem driver, or `core.portfolio`'s island driver — all through
+    :func:`lockstep_generation`-compatible phases)."""
 
     __slots__ = (
         "prob", "rng", "t0", "backend", "batched", "use_cache", "hetero",

@@ -1,35 +1,66 @@
-"""Multi-seed island portfolio: concurrent GA/SA runs with migration.
+"""Multi-seed island portfolio: a deterministic fleet of GA/SA islands.
 
 The paper's hybrid mappers are stochastic — different seeds land on
 different local optima.  A *portfolio* run hedges that variance: K islands
 (differently-seeded GA/SA instances, possibly with different algorithms or
-hyperparameters) evolve concurrently on a thread pool under one shared
-wall-clock budget.  Every ``migration_every`` seconds the islands
-synchronize and the global best solution migrates into each island's warm
-state (replacing the worst GA individual / the SA incumbent if better), so
-good building blocks spread without collapsing diversity between barriers.
+hyperparameters) evolve on one problem and periodically exchange their best
+packing, so good building blocks spread without collapsing diversity.
 
-The numpy/JAX work inside each island releases the GIL for the batched
-evaluation path; the pure-Python mutation loops time-slice.  Thread
-scheduling adds no nondeterminism of its own — migration happens at
-full-round barriers and each island's RNG stream depends only on its own
-seed and the round index — but rounds are wall-clock budgeted, so (as with
-any single time-budgeted GA/SA run) results still vary with machine speed
-and load.
+The portfolio is **fleet-native and iteration-budgeted** — an array
+program, not a thread pool:
+
+* Every multi-chain ``sa-s`` island rides the SA fleet core
+  (`SimulatedAnnealingPacker._anneal_block`): K same-problem islands are a
+  ``P = K`` fleet with problem-major rows and one ``np.random.Generator``
+  stream per island, exactly the layout ``core.dse.pack_sweep`` uses for
+  cross-problem sweeps — here the "problems" are replicas of one problem.
+* GA islands advance generation-by-generation through the `_GARun` phase
+  helpers (`ga.lockstep_generation`), stacking every island's population
+  fitness into one leading-axis ``(K, n_pop, NB)`` kernel call.
+* Scalar engines (``sa-nfd``'s sequential NFD repack, single-chain
+  ``sa-s``, ``legacy`` backends) run their own resumable loops — the same
+  code path their standalone ``pack()`` uses, advanced in segments.
+* **Migration is a deterministic array exchange at fixed barriers**: every
+  ``migration_every`` iterations (SA steps) / generations (GA), the global
+  best solution is broadcast into each *other* island's worst warm slot
+  (worst chain / worst individual / the incumbent), iff strictly better
+  under the inventory-penalized cost.  Migration never touches patience
+  counters, so it can never revive a frozen island — a frozen island stops
+  drawing RNG exactly where its standalone run would.
+
+Because islands advance by iteration counts and each consumes only its own
+seeded RNG stream, ``pack_portfolio(prob, seed=s, ...)`` is **bit-
+reproducible** run-to-run and machine-independent (given iteration budgets;
+``max_seconds`` remains as an outer safety cap only), and a single-island
+portfolio is bit-identical to the corresponding standalone ``pack()`` run —
+both pinned in ``tests/test_portfolio.py``.  Barrier semantics and the
+seed/stream layout: docs/DESIGN.md section 11.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 from typing import Sequence
 
-from .ga import GeneticPacker
-from .problem import PackingProblem, PackingResult, Solution
+import numpy as np
+
+from .ga import GeneticPacker, lockstep_generation
+from .problem import (
+    DEFAULT_INVENTORY_PENALTY,
+    PackingProblem,
+    PackingResult,
+    Solution,
+    decode_chain_items,
+)
 from .sa import SimulatedAnnealingPacker
 
-# offset between per-round reseeds; any large odd constant keeps island
-# streams disjoint from the user-visible base seeds
+# default barrier spacing: SA iterations / GA generations between migrations
+DEFAULT_MIGRATION_EVERY = 64
+
+# offset between per-round reseeds of the legacy thread-pool portfolio; any
+# large odd constant keeps island streams disjoint from the base seeds
 _ROUND_SEED_STRIDE = 7919
 
 
@@ -42,8 +73,396 @@ class IslandSpec:
     hyper: dict = dataclasses.field(default_factory=dict)
 
 
+# --------------------------------------------------------------- island views
+class _SAFleetGroup:
+    """K same-problem sa-s islands advanced as ONE `_anneal_block` fleet.
+
+    Row ``j * C + c`` is chain ``c`` of island ``j``; the bin-slot envelope
+    is widened to ``prob.n`` so any migrant packing can be encoded into a
+    chain slot (envelope padding never affects trajectories — DESIGN.md
+    section 10)."""
+
+    def __init__(self, packer, prob, rngs, backend):
+        self.packer = packer
+        self.st = packer._block_start(
+            [prob] * len(rngs), rngs, [[] for _ in rngs], backend,
+            n_slots=prob.n,
+        )
+
+    def advance(self, limit: int | None) -> bool:
+        if self.st.done:
+            return False
+        before = self.st.it
+        self.packer._block_run(self.st, limit)
+        return self.st.it > before
+
+
+class _FleetIsland:
+    """View of one member problem of a `_SAFleetGroup`."""
+
+    def __init__(self, group: _SAFleetGroup, j: int):
+        self.group = group
+        self.j = j
+        self.packer = group.packer
+
+    def done(self) -> bool:
+        return self.group.st.done or self.packer._block_frozen(
+            self.group.st, self.j
+        )
+
+    def raw(self) -> tuple[int, int]:
+        st, j = self.group.st, self.j
+        cost = int(st.gbest_cost[j])
+        if st.hetero:
+            ovf = int(st.batch.overflow_rows(
+                st.g_UK[j : j + 1], np.asarray([j])
+            )[0])
+        else:
+            ovf = 0
+        return cost, ovf
+
+    def best_solution(self) -> Solution:
+        st, j = self.group.st, self.j
+        return decode_chain_items(
+            st.probs[j], st.g_items[j], st.g_counts[j],
+            st.g_kinds[j] if st.hetero else None,
+        )
+
+    def migrate_in(self, sol: Solution) -> bool:
+        return self.packer._block_migrate(self.group.st, self.j, sol)
+
+    def trace(self) -> list:
+        return self.group.st.traces[self.j]
+
+    def offset(self, t0: float) -> float:
+        return self.group.st.t_start - t0
+
+    def iterations(self) -> int:
+        st, c = self.group.st, self.packer.n_chains
+        return int(st.steps[self.j * c : (self.j + 1) * c].sum())
+
+
+class _GAGroup:
+    """All GA islands, advanced in lockstep with stacked fitness calls."""
+
+    def __init__(self, pairs):
+        self.pairs = pairs  # [(packer, run)] in island order
+
+    def advance(self, limit: int | None) -> bool:
+        progressed = False
+        while lockstep_generation(self.pairs, gen_limit=limit):
+            progressed = True
+        return progressed
+
+
+class _GAIsland:
+    def __init__(self, packer: GeneticPacker, run):
+        self.packer = packer
+        self.run = run
+
+    def done(self) -> bool:
+        # exhausted patience counts as done even before the next lockstep
+        # call marks it (mirrors _ScalarIsland: no migrants for converged runs)
+        return self.run.done or self.run.stale >= self.packer.patience
+
+    def raw(self) -> tuple[int, int]:
+        cost = int(self.run.best_cost)
+        ovf = int(self.run.best.inventory_overflow()) if self.run.hetero else 0
+        return cost, ovf
+
+    def best_solution(self) -> Solution:
+        return self.run.best
+
+    def migrate_in(self, sol: Solution) -> bool:
+        return self.packer._migrate_in(self.run, sol)
+
+    def trace(self) -> list:
+        return self.run.trace
+
+    def offset(self, t0: float) -> float:
+        return self.run.t0 - t0
+
+    def iterations(self) -> int:
+        return self.run.gen
+
+
+class _ScalarIsland:
+    """A scalar-loop or single-chain SA island (its own resumable state)."""
+
+    def __init__(self, packer: SimulatedAnnealingPacker, st, single: bool):
+        self.packer = packer
+        self.st = st
+        self.single = single
+
+    def advance(self, limit: int | None) -> bool:
+        if self.st.done:
+            return False
+        before = self.st.it
+        run = self.packer._single_run if self.single else self.packer._scalar_run
+        run(self.st, limit)
+        return self.st.it > before
+
+    def done(self) -> bool:
+        return self.st.done or self.st.stale >= self.packer.patience
+
+    def raw(self) -> tuple[int, int]:
+        return int(self.st.best_cost), int(self.st.best_ovf)
+
+    def best_solution(self) -> Solution:
+        return self.st.best
+
+    def migrate_in(self, sol: Solution) -> bool:
+        hook = (
+            self.packer._single_migrate if self.single
+            else self.packer._scalar_migrate
+        )
+        return hook(self.st, sol)
+
+    def trace(self) -> list:
+        return self.st.trace
+
+    def offset(self, t0: float) -> float:
+        return self.st.t_start - t0
+
+    def iterations(self) -> int:
+        return self.st.it
+
+
+def _merge_traces(parts: list[tuple[float, list]]) -> list:
+    """Global monotone best-so-far trace across (offset, trace) parts."""
+    events: list[tuple[float, float]] = []
+    for offset, tr in parts:
+        events.extend((offset + t, cc) for t, cc in tr)
+    events.sort()
+    merged: list = []
+    best = None
+    for t, cc in events:
+        if best is None or cc < best:
+            best = cc
+            merged.append((t, cc))
+    return merged
+
+
+def _sa_fleet_key(packer: SimulatedAnnealingPacker, resolved: str) -> tuple:
+    """Engine signature under which sa-s islands share one fleet: everything
+    that shapes the array program except the seed (per-island RNG streams
+    keep differently-seeded islands independent inside one fleet)."""
+    return (
+        resolved, packer.n_chains, packer.t0, packer.rc, packer.swap_moves,
+        packer.p_adm_w, packer.p_adm_h, packer.intra_layer,
+        packer.max_iterations, packer.patience, packer.max_seconds,
+        packer.exchange_every, packer.ladder_min, packer.ladder_max,
+        packer.p_kind, packer.inventory_penalty,
+    )
+
+
+def pack_portfolio(
+    prob: PackingProblem,
+    islands: Sequence[IslandSpec] | None = None,
+    n_islands: int = 4,
+    algorithms: Sequence[str] = ("ga-nfd", "sa-s", "sa-nfd"),
+    seed: int = 0,
+    max_seconds: float = 30.0,
+    migration_every: int | None = None,
+    intra_layer: bool = False,
+    backend: str = "auto",
+    max_workers: int | None = None,
+    sa_chains: int = 8,
+    **hyper,
+) -> PackingResult:
+    """Run K differently-seeded islands as one fleet; return the best result.
+
+    ``islands`` gives full control; otherwise ``n_islands`` specs are derived
+    by cycling ``algorithms`` with seeds ``seed, seed+1, ...``.  ``hyper``
+    accepts the same Table-2 names as :func:`repro.core.api.pack` and applies
+    to every island (per-island ``IslandSpec.hyper`` overrides win).
+
+    ``migration_every`` is an **iteration/generation count** (default 64,
+    `DEFAULT_MIGRATION_EVERY`): each barrier advances SA islands that many
+    annealing steps and GA islands that many generations, then broadcasts
+    the global best into every other live island's worst warm slot.  Pass
+    ``migration_every=0`` to disable migration (islands run independently
+    to their budgets).  ``max_seconds`` is an outer safety cap only — for
+    bit-reproducible, machine-independent runs give the islands iteration
+    budgets (``max_iterations`` / ``max_generations``) and a large
+    ``max_seconds``, exactly as with :func:`repro.core.api.pack_sweep`.
+
+    A "sa-s" island runs the batched multi-chain annealer with ``sa_chains``
+    temperature-laddered chains; all such islands advance as ONE
+    `_anneal_block` fleet (K islands x C chains of problem-major rows), so
+    the portfolio's SA work is a single vectorized array program.  A
+    single-island portfolio is bit-identical to the standalone
+    ``pack(prob, algorithm, seed=...)`` run — same engines, same RNG
+    streams, no migration.
+
+    Heterogeneous device scenarios need no extra wiring: build the problem
+    with an inventory (``get_problem(name, device="U280")``) and every
+    island explores RAM-kind lanes under the shared inventory penalty —
+    migrated solutions carry their kind lanes with them, and the ``p_kind``
+    / ``inventory_penalty`` hyperparameters pass through like any Table-2
+    name.
+
+    ``max_workers`` is deprecated and ignored: the fleet-native portfolio
+    has no thread pool (see :func:`pack_portfolio_threads` for the legacy
+    engine, kept as a benchmark baseline).
+    """
+    from .api import make_packer  # late import: api imports nothing from here
+
+    if max_workers is not None:
+        warnings.warn(
+            "pack_portfolio(max_workers=...) is deprecated and ignored: the "
+            "portfolio is fleet-native (no thread pool); use "
+            "pack_portfolio_threads for the legacy engine",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+    if islands is None:
+        if n_islands < 1:
+            raise ValueError("n_islands must be >= 1")
+        islands = [
+            IslandSpec(algorithm=algorithms[k % len(algorithms)], seed=seed + k)
+            for k in range(n_islands)
+        ]
+    islands = list(islands)
+    if not islands:
+        raise ValueError("portfolio needs at least one island")
+    interval = (
+        DEFAULT_MIGRATION_EVERY if migration_every is None
+        else int(migration_every)
+    )
+    hetero = prob.n_kinds > 1
+    t0 = time.perf_counter()
+
+    # --- build islands; group sa-s fleets, GA lockstep pairs, scalar loops
+    packers = [
+        make_packer(
+            spec.algorithm,
+            seed=spec.seed,
+            max_seconds=max_seconds,
+            intra_layer=intra_layer,
+            backend=backend,
+            **{
+                **({"n_chains": sa_chains} if spec.algorithm == "sa-s" else {}),
+                **hyper,
+                **spec.hyper,
+            },
+        )
+        for spec in islands
+    ]
+    # cross-island ranking weight for the global best: the portfolio-level
+    # override if given, else the strictest island's penalty (per-island
+    # IslandSpec.hyper overrides may differ; ranking under the max keeps a
+    # feasible packing outranking an overflowing one for every island)
+    lam = (
+        float(hyper["inventory_penalty"])
+        if "inventory_penalty" in hyper
+        else max(float(p.inventory_penalty) for p in packers)
+    )
+    adapters: list = [None] * len(islands)
+    groups: list = []
+    ga_pairs: list = []
+    fleet_members: dict[tuple, list] = {}  # fleet key -> [(k, packer)]
+    for k, packer in enumerate(packers):
+        if isinstance(packer, GeneticPacker):
+            b = packer._resolve_backend()
+            run = packer._start_run(
+                prob, np.random.default_rng(packer.seed), None, b
+            )
+            totals = (
+                packer._batched_costs(run.W, run.H, b, run.Km, run.kt, run.modes0)
+                if run.batched
+                else None
+            )
+            packer._eval_init(run, totals)
+            ga_pairs.append((packer, run))
+            adapters[k] = _GAIsland(packer, run)
+            continue
+        resolved = packer._resolve_backend()
+        packer._hetero = hetero
+        if packer.perturbation == "nfd" or resolved == "legacy":
+            st = packer._scalar_start(prob, None)
+            isl = _ScalarIsland(packer, st, single=False)
+            groups.append(isl)
+            adapters[k] = isl
+        elif packer.n_chains == 1:
+            st = packer._single_start(prob, None, resolved)
+            isl = _ScalarIsland(packer, st, single=True)
+            groups.append(isl)
+            adapters[k] = isl
+        else:
+            fleet_members.setdefault(_sa_fleet_key(packer, resolved), []).append(
+                (k, packer)
+            )
+    if ga_pairs:
+        groups.append(_GAGroup(ga_pairs))
+    for members in fleet_members.values():
+        fleet = _SAFleetGroup(
+            members[0][1],
+            prob,
+            [np.random.default_rng(p.seed) for _, p in members],
+            members[0][1]._resolve_backend(),
+        )
+        groups.append(fleet)
+        for j, (k, _) in enumerate(members):
+            adapters[k] = _FleetIsland(fleet, j)
+
+    # --- barriered fleet loop: advance everything, then migrate
+    barrier = 0
+    migrations = 0
+    single = len(adapters) == 1
+    while any(not isl.done() for isl in adapters):
+        if barrier > 0 and time.perf_counter() - t0 > max_seconds:
+            break
+        barrier += 1
+        limit = None if (single or interval <= 0) else barrier * interval
+        progressed = [g.advance(limit) for g in groups]
+        if not single and interval > 0:
+            # deterministic migration: strict-min global best (first island
+            # wins ties) lands in every OTHER live island's worst warm slot
+            vals = [c + lam * o for c, o in (isl.raw() for isl in adapters)]
+            src = min(range(len(vals)), key=vals.__getitem__)
+            migrant = adapters[src].best_solution()
+            for k, isl in enumerate(adapters):
+                if k != src:
+                    migrations += isl.migrate_in(migrant)
+        if not any(progressed):
+            break  # no island can move: budgets exhausted mid-barrier
+
+    # --- assemble the portfolio result (strict-min, first island wins ties)
+    wall = time.perf_counter() - t0
+    raws = [isl.raw() for isl in adapters]
+    vals = [c + lam * o for c, o in raws]
+    best_k = min(range(len(vals)), key=vals.__getitem__)
+    best_sol = adapters[best_k].best_solution()
+    best_cost = raws[best_k][0]
+    trace = _merge_traces([(isl.offset(t0), isl.trace()) for isl in adapters])
+    trace.append((wall, vals[best_k] if hetero else best_cost))
+    names = "+".join(p.name for p in packers)
+    return PackingResult(
+        solution=best_sol,
+        cost=int(best_cost),
+        efficiency=best_sol.efficiency(),
+        wall_time_s=wall,
+        algorithm=f"portfolio[{names}]" + ("-intra" if intra_layer else ""),
+        trace=trace,
+        iterations=sum(isl.iterations() for isl in adapters),
+        params=dict(
+            islands=[
+                dict(algorithm=s.algorithm, seed=s.seed, **s.hyper) for s in islands
+            ],
+            barriers=barrier,
+            migration_every=interval,
+            migrations=migrations,
+            backend=backend,
+            seed=seed,
+        ),
+    )
+
+
+# ---------------------------------------------------- legacy thread portfolio
 class _Island:
-    """A packer plus its warm state, advanced one budgeted round at a time."""
+    """A packer plus its warm state, advanced one budgeted round at a time
+    (the legacy thread-pool portfolio's unit of work)."""
 
     def __init__(self, prob: PackingProblem, spec: IslandSpec, packer):
         self.prob = prob
@@ -76,23 +495,7 @@ class _Island:
             warm[worst] = best.copy()
 
 
-def _merge_traces(rounds: list[tuple[float, list[PackingResult]]]) -> list:
-    """Global monotone best-so-far trace across islands and rounds."""
-    events: list[tuple[float, int]] = []
-    for offset, results in rounds:
-        for r in results:
-            events.extend((offset + t, c) for t, c in r.trace)
-    events.sort()
-    merged: list[tuple[float, int]] = []
-    best = None
-    for t, c in events:
-        if best is None or c < best:
-            best = c
-            merged.append((t, c))
-    return merged
-
-
-def pack_portfolio(
+def pack_portfolio_threads(
     prob: PackingProblem,
     islands: Sequence[IslandSpec] | None = None,
     n_islands: int = 4,
@@ -106,25 +509,14 @@ def pack_portfolio(
     sa_chains: int = 8,
     **hyper,
 ) -> PackingResult:
-    """Run K differently-seeded islands concurrently; return the best result.
+    """The legacy thread-pool portfolio, kept as the benchmark baseline.
 
-    ``islands`` gives full control; otherwise ``n_islands`` specs are derived
-    by cycling ``algorithms`` with seeds ``seed, seed+1, ...``.  ``hyper``
-    accepts the same Table-2 names as :func:`repro.core.api.pack` and applies
-    to every island (per-island ``IslandSpec.hyper`` overrides win).
-
-    A "sa-s" island runs the batched multi-chain annealer with ``sa_chains``
-    temperature-laddered chains sharing one fused delta-cost evaluation —
-    one such island replaces what used to take K scalar SA islands (and
-    their K thread slots); its chains warm-restart and receive migrants
-    like any other island's population.
-
-    Heterogeneous device scenarios need no extra wiring: build the problem
-    with an inventory (``get_problem(name, device="U280")``) and every
-    island explores RAM-kind lanes under the shared inventory penalty —
-    migrated solutions carry their kind lanes with them, and the ``p_kind``
-    / ``inventory_penalty`` hyperparameters pass through like any Table-2
-    name.
+    K islands evolve concurrently on a thread pool under one shared
+    wall-clock budget, synchronizing every ``migration_every`` *seconds*
+    (default ``max_seconds / 4``) to migrate the global best.  Rounds are
+    wall-clock budgeted, so results vary with machine speed and load —
+    exactly the nondeterminism the fleet-native :func:`pack_portfolio`
+    replaced (``benchmarks/run.py --only portfolio`` compares the two).
     """
     from .api import make_packer  # late import: api imports nothing from here
 
@@ -162,7 +554,7 @@ def pack_portfolio(
     # island comparisons use the inventory-penalized cost on heterogeneous
     # problems so a feasible packing always outranks an overflowing one
     hetero = prob.n_kinds > 1
-    lam = hyper.get("inventory_penalty", 32.0)
+    lam = hyper.get("inventory_penalty", DEFAULT_INVENTORY_PENALTY)
     if hetero:
         def score(sol: Solution) -> float:
             return sol.cost() + lam * sol.inventory_overflow()
@@ -198,7 +590,9 @@ def pack_portfolio(
                 isl.migrate_in(best_sol, best_val, score)
             round_idx += 1
     wall = time.perf_counter() - t0
-    trace = _merge_traces(rounds)
+    trace = _merge_traces(
+        [(offset, r.trace) for offset, results in rounds for r in results]
+    )
     trace.append((wall, best_cost))
     names = "+".join(isl.packer.name for isl in pool)
     return PackingResult(
@@ -206,7 +600,7 @@ def pack_portfolio(
         cost=int(best_cost),
         efficiency=best_sol.efficiency(),
         wall_time_s=wall,
-        algorithm=f"portfolio[{names}]" + ("-intra" if intra_layer else ""),
+        algorithm=f"portfolio-threads[{names}]" + ("-intra" if intra_layer else ""),
         trace=trace,
         iterations=iterations,
         params=dict(

@@ -62,6 +62,12 @@ BRAM18_MODES: tuple[tuple[int, int], ...] = (
 )
 BRAM18_CAPACITY_BITS = 18 * 1024  # Eq. 1 denominator (18432), as in the paper
 
+# Default weight of one unit of inventory overflow in the engines' penalized
+# cost (heterogeneous OCM problems; see Solution.inventory_overflow).  The
+# single source of truth — api/ga/sa/portfolio all import it, so the GA, the
+# SA engines, and the portfolio's migration scoring can never drift apart.
+DEFAULT_INVENTORY_PENALTY = 32.0
+
 
 @dataclasses.dataclass(frozen=True)
 class BRAMSpec:

@@ -44,6 +44,17 @@ Three engines share this class:
   batches whole DSE candidate fleets through it, and a single-problem run
   is literally ``P == 1`` (docs/DESIGN.md section 10).
 
+Every engine is **resumable**: the loop state lives in a run object
+(`_BlockState` / `_ScalarRun` / `_SingleChainRun`) created by a ``_start``
+helper, advanced by a ``_run`` helper that accepts an iteration *barrier*
+(``it_limit``), and closed by a ``_finish`` helper.  The public ``pack()``
+entry points simply compose start + run-to-budget + finish, so they are
+bit-identical to the historical monolithic loops; ``core.portfolio`` drives
+the same helpers in iteration-budgeted segments, pausing every island at
+deterministic barriers for migration (the ``_*_migrate`` hooks), which is
+what makes portfolio runs machine-speed-independent (docs/DESIGN.md
+section 11).
+
 On heterogeneous OCM problems every engine anneals the inventory-penalized
 cost: with probability ``p_kind`` a move is a RAM-kind flip of a random bin
 (scalar loop + single-chain engine share the draw inside
@@ -74,6 +85,7 @@ from .ga import (
 )
 from .nfd import nfd_from_scratch, nfd_repack
 from .problem import (
+    DEFAULT_INVENTORY_PENALTY,
     PackingProblem,
     PackingResult,
     Solution,
@@ -99,6 +111,32 @@ class _BlockOut:
     wall: float
 
 
+class _BlockState:
+    """Resumable state of one `_anneal_block` fleet (P problems x C chains).
+
+    Built by `_block_start`, advanced by `_block_run` (optionally only up
+    to an iteration barrier), decoded by `_block_finish`.  All chain/geometry
+    matrices, per-problem RNG streams, best tracking, and patience counters
+    live here, so pausing at a barrier and resuming is bit-identical to one
+    uninterrupted run — the contract the fleet-native portfolio builds on.
+    """
+
+    done: bool = False      # budget/wall exhausted or every problem frozen
+    frozen: bool = False    # every problem past patience (subset of done)
+
+
+class _ScalarRun:
+    """Resumable state of the scalar SA loop (one chain, Solution copies)."""
+
+    done: bool = False
+
+
+class _SingleChainRun:
+    """Resumable state of the single-chain delta engine."""
+
+    done: bool = False
+
+
 class SimulatedAnnealingPacker:
     def __init__(
         self,
@@ -122,7 +160,7 @@ class SimulatedAnnealingPacker:
         ladder_min: float = 0.25,
         ladder_max: float = 4.0,
         p_kind: float = 0.15,
-        inventory_penalty: float = 32.0,
+        inventory_penalty: float = DEFAULT_INVENTORY_PENALTY,
     ):
         if perturbation not in ("nfd", "swap"):
             raise ValueError(f"unknown perturbation {perturbation!r}")
@@ -197,65 +235,121 @@ class SimulatedAnnealingPacker:
     # ------------------------------------------------------------ scalar loop
     def _pack_scalar(self, prob: PackingProblem, init) -> PackingResult:
         """The seed's serial annealer (one chain, one Solution copy per move)."""
+        st = self._scalar_start(prob, init)
+        self._scalar_run(st)
+        return self._scalar_finish(st)
+
+    def _scalar_start(
+        self, prob: PackingProblem, init, rng: np.random.Generator | None = None
+    ) -> _ScalarRun:
         if init is not None and not isinstance(init, Solution):
             init = init[0] if len(init) else None
-        rng = np.random.default_rng(self.seed)
-        t_start = time.perf_counter()
+        st = _ScalarRun()
+        st.prob = prob
+        st.rng = rng if rng is not None else np.random.default_rng(self.seed)
+        st.t_start = time.perf_counter()
         sol = init.copy() if init is not None else nfd_from_scratch(
             prob,
-            rng,
+            st.rng,
             p_adm_w=self.p_adm_w,
             p_adm_h=self.p_adm_h,
             intra_layer=self.intra_layer,
         )
-        hetero = self._hetero
-        lam = self.inventory_penalty
-        cost = sol.cost()
-        ovf = sol.inventory_overflow() if hetero else 0
-        best, best_cost, best_ovf = sol.copy(), cost, ovf
+        st.hetero = self._hetero
+        st.lam = self.inventory_penalty
+        st.sol = sol
+        st.cost = sol.cost()
+        st.ovf = sol.inventory_overflow() if st.hetero else 0
+        st.best, st.best_cost, st.best_ovf = sol.copy(), st.cost, st.ovf
         # hetero traces record the penalized cost (the annealed quantity) so
         # the curve stays monotone; raw == penalized on single-kind problems
-        trace = [(time.perf_counter() - t_start,
-                  best_cost + lam * best_ovf if hetero else best_cost)]
-        it = 0
-        stale = 0
-        while it < self.max_iterations and stale < self.patience:
-            if (it & 0xFF) == 0 and time.perf_counter() - t_start > self.max_seconds:
-                break
-            temp = self.t0 / (1.0 + self.rc * it)
-            cand = self._perturb(sol, rng)
+        st.trace = [(time.perf_counter() - st.t_start,
+                     st.best_cost + st.lam * st.best_ovf if st.hetero
+                     else st.best_cost)]
+        st.it = 0
+        st.stale = 0
+        st.done = False
+        return st
+
+    def _scalar_run(self, st: _ScalarRun, it_limit: int | None = None) -> None:
+        """Advance until ``it_limit`` (a portfolio barrier), the iteration /
+        patience budget, or the wall cap; pausing at a barrier and resuming
+        is bit-identical to one uninterrupted run."""
+        limit = (
+            self.max_iterations if it_limit is None
+            else min(self.max_iterations, it_limit)
+        )
+        hetero, lam, rng = st.hetero, st.lam, st.rng
+        while st.it < limit and st.stale < self.patience:
+            if (st.it & 0xFF) == 0 and (
+                time.perf_counter() - st.t_start > self.max_seconds
+            ):
+                st.done = True
+                return
+            temp = self.t0 / (1.0 + self.rc * st.it)
+            cand = self._perturb(st.sol, rng)
             cand_cost = cand.cost()
             # the annealed energy is the inventory-penalized cost; the two
             # int deltas are kept separate so the single-kind path stays in
             # exact integer arithmetic (d_e is then just the cost delta)
-            d_e = cand_cost - cost
+            d_e = cand_cost - st.cost
             if hetero:
                 cand_ovf = cand.inventory_overflow()
-                d_e = d_e + lam * (cand_ovf - ovf)
+                d_e = d_e + lam * (cand_ovf - st.ovf)
             else:
                 cand_ovf = 0
             if d_e < 0 or (temp > 0 and rng.random() < math.exp(-d_e / temp)):
-                sol, cost, ovf = cand, cand_cost, cand_ovf
+                st.sol, st.cost, st.ovf = cand, cand_cost, cand_ovf
             if hetero:
-                improved = (cost - best_cost) + lam * (ovf - best_ovf) < 0
+                improved = (st.cost - st.best_cost) + lam * (st.ovf - st.best_ovf) < 0
             else:
-                improved = cost < best_cost
+                improved = st.cost < st.best_cost
             if improved:
-                best, best_cost, best_ovf = sol.copy(), cost, ovf
-                trace.append((time.perf_counter() - t_start,
-                              best_cost + lam * best_ovf if hetero else best_cost))
-                stale = 0
+                st.best, st.best_cost, st.best_ovf = st.sol.copy(), st.cost, st.ovf
+                st.trace.append((time.perf_counter() - st.t_start,
+                                 st.best_cost + lam * st.best_ovf if hetero
+                                 else st.best_cost))
+                st.stale = 0
             else:
-                stale += 1
-            it += 1
+                st.stale += 1
+            st.it += 1
+        if st.it >= self.max_iterations or st.stale >= self.patience:
+            st.done = True
+
+    def _scalar_finish(self, st: _ScalarRun) -> PackingResult:
         # the trace holds the monotone improvement curve only; the run's end
         # lives in wall_time_s (the seed appended a duplicate terminal tuple)
-        wall = time.perf_counter() - t_start
-        self.last_solution_ = sol
-        self.last_chains_ = [sol]
+        wall = time.perf_counter() - st.t_start
+        self.last_solution_ = st.sol
+        self.last_chains_ = [st.sol]
         return self._result(
-            best, int(best_cost), wall, trace, it, "legacy", uphill=None
+            st.best, int(st.best_cost), wall, st.trace, st.it, "legacy",
+            uphill=None,
         )
+
+    def _scalar_migrate(self, st: _ScalarRun, sol: Solution) -> bool:
+        """Portfolio barrier hook: the migrant replaces the incumbent iff it
+        strictly beats its penalized cost.  A finished run is never touched
+        and ``stale`` is never reset, so migration cannot revive a frozen
+        island (it stops drawing RNG exactly where a standalone run would).
+        """
+        if st.done or st.stale >= self.patience:
+            return False
+        lam = self.inventory_penalty
+        cost = sol.cost()
+        ovf = sol.inventory_overflow() if st.hetero else 0
+        if cost + lam * ovf >= st.cost + lam * st.ovf:
+            return False
+        st.sol = sol.copy()
+        st.cost = cost
+        st.ovf = ovf
+        # fold the migrant into the patience-reference best (no trace entry,
+        # no stale reset): otherwise the next improved-check would treat the
+        # migrant as this island's own discovery and revive its patience —
+        # the same suppression `_block_migrate` does via best_pcosts
+        if cost + lam * ovf < st.best_cost + lam * st.best_ovf:
+            st.best, st.best_cost, st.best_ovf = st.sol.copy(), cost, ovf
+        return True
 
     # ----------------------------------------------- single-chain delta engine
     def _pack_single_chain(self, prob: PackingProblem, init, backend):
@@ -265,56 +359,89 @@ class SimulatedAnnealingPacker:
         (scalar per-move draws, Metropolis uniform only on uphill moves),
         same float64 ``math.exp`` compare, exact integer deltas.
         """
-        from repro.kernels.binpack_sa_step.ops import sa_step_deltas
+        st = self._single_start(prob, init, backend)
+        self._single_run(st)
+        return self._single_finish(st)
 
-        interpret = backend == "pallas" and _default_jax_backend() != "tpu"
-        rng = np.random.default_rng(self.seed)
-        t_start = time.perf_counter()
+    def _single_start(
+        self, prob: PackingProblem, init, backend,
+        rng: np.random.Generator | None = None,
+    ) -> _SingleChainRun:
+        st = _SingleChainRun()
+        st.prob = prob
+        st.backend = backend
+        st.interpret = backend == "pallas" and _default_jax_backend() != "tpu"
+        st.rng = rng if rng is not None else np.random.default_rng(self.seed)
+        st.t_start = time.perf_counter()
         if init is not None and not isinstance(init, Solution):
             init = init[0] if len(init) else None
         sol = init.copy() if init is not None else nfd_from_scratch(
             prob,
-            rng,
+            st.rng,
             p_adm_w=self.p_adm_w,
             p_adm_h=self.p_adm_h,
             intra_layer=self.intra_layer,
         )
-        hetero = self._hetero
-        lam = self.inventory_penalty
-        pk = self.p_kind if hetero else 0.0
-        kt = prob.kind_tables if hetero else None
-        modes0 = prob.kind_tables[0][1]  # == BRAM18_MODES on default problems
-        cost = int(sol.cost())
-        chain_w = np.zeros((1, prob.n), dtype=np.int32)
-        chain_h = np.zeros_like(chain_w)
-        sol.fill_geometry(chain_w[0], chain_h[0])
-        if hetero:
-            chain_k = np.zeros((1, prob.n), dtype=np.int32)
-            sol.fill_kinds(chain_k[0])
-            used = sol.used_primitives()
-            ovf = int(prob.overflow_units(used))
+        st.sol = sol
+        st.hetero = self._hetero
+        st.lam = self.inventory_penalty
+        st.pk = self.p_kind if st.hetero else 0.0
+        st.kt = prob.kind_tables if st.hetero else None
+        st.modes0 = prob.kind_tables[0][1]  # == BRAM18_MODES on default problems
+        st.cost = int(sol.cost())
+        st.chain_w = np.zeros((1, prob.n), dtype=np.int32)
+        st.chain_h = np.zeros_like(st.chain_w)
+        sol.fill_geometry(st.chain_w[0], st.chain_h[0])
+        if st.hetero:
+            st.chain_k = np.zeros((1, prob.n), dtype=np.int32)
+            sol.fill_kinds(st.chain_k[0])
+            st.used = sol.used_primitives()
+            st.ovf = int(prob.overflow_units(st.used))
         else:
-            chain_k = None
-            ovf = 0
-        best, best_cost, best_ovf = sol.copy(), cost, ovf
-        trace = [(time.perf_counter() - t_start,
-                  best_cost + lam * best_ovf if hetero else best_cost)]
+            st.chain_k = None
+            st.used = None
+            st.ovf = 0
+        st.best, st.best_cost, st.best_ovf = sol.copy(), st.cost, st.ovf
+        st.trace = [(time.perf_counter() - st.t_start,
+                     st.best_cost + st.lam * st.best_ovf if st.hetero
+                     else st.best_cost)]
         width = 2 * max(self.swap_moves, 1)
-        old_w = np.zeros((1, width), dtype=np.int32)
-        old_h = np.zeros_like(old_w)
-        new_w = np.zeros_like(old_w)
-        new_h = np.zeros_like(old_w)
-        old_k = np.zeros_like(old_w) if hetero else None
-        new_k = np.zeros_like(old_w) if hetero else None
-        undo: list = []
-        uphill_prop = 0
-        uphill_acc = 0
-        it = 0
-        stale = 0
-        while it < self.max_iterations and stale < self.patience:
-            if (it & 0xFF) == 0 and time.perf_counter() - t_start > self.max_seconds:
-                break
-            temp = self.t0 / (1.0 + self.rc * it)
+        st.old_w = np.zeros((1, width), dtype=np.int32)
+        st.old_h = np.zeros_like(st.old_w)
+        st.new_w = np.zeros_like(st.old_w)
+        st.new_h = np.zeros_like(st.old_w)
+        st.old_k = np.zeros_like(st.old_w) if st.hetero else None
+        st.new_k = np.zeros_like(st.old_w) if st.hetero else None
+        st.undo = []
+        st.uphill_prop = 0
+        st.uphill_acc = 0
+        st.it = 0
+        st.stale = 0
+        st.done = False
+        return st
+
+    def _single_run(self, st: _SingleChainRun, it_limit: int | None = None) -> None:
+        from repro.kernels.binpack_sa_step.ops import sa_step_deltas
+
+        limit = (
+            self.max_iterations if it_limit is None
+            else min(self.max_iterations, it_limit)
+        )
+        prob, sol, rng = st.prob, st.sol, st.rng
+        hetero, lam, pk, kt, modes0 = st.hetero, st.lam, st.pk, st.kt, st.modes0
+        backend, interpret = st.backend, st.interpret
+        chain_w, chain_h, chain_k = st.chain_w, st.chain_h, st.chain_k
+        old_w, old_h = st.old_w, st.old_h
+        new_w, new_h = st.new_w, st.new_h
+        old_k, new_k = st.old_k, st.new_k
+        undo = st.undo
+        while st.it < limit and st.stale < self.patience:
+            if (st.it & 0xFF) == 0 and (
+                time.perf_counter() - st.t_start > self.max_seconds
+            ):
+                st.done = True
+                return
+            temp = self.t0 / (1.0 + self.rc * st.it)
             # --- propose in place (legacy RNG stream; kind moves only when
             # the problem is heterogeneous, matching the scalar loop)
             undo.clear()
@@ -352,7 +479,7 @@ class SimulatedAnnealingPacker:
                 # inventory-penalty delta from the touched bins' primitive
                 # usage (exact integer bookkeeping, O(touched) cache hits)
                 if prob._any_bounded:
-                    used2 = used.copy()
+                    used2 = st.used.copy()
                     for t in range(k):
                         if old_w[0, t] > 0:
                             used2[old_k[0, t]] -= prob.bin_primitives(
@@ -364,8 +491,8 @@ class SimulatedAnnealingPacker:
                             )
                     ovf2 = int(prob.overflow_units(used2))
                 else:
-                    used2, ovf2 = used, 0  # unbounded inventory never overflows
-                d_e = d_cost + lam * (ovf2 - ovf)
+                    used2, ovf2 = st.used, 0  # unbounded inventory never overflows
+                d_e = d_cost + lam * (ovf2 - st.ovf)
             else:
                 d_cost = int(
                     sa_step_deltas(
@@ -376,13 +503,13 @@ class SimulatedAnnealingPacker:
                 d_e = d_cost
             # --- Metropolis: the uniform is drawn only for uphill moves
             if d_e > 0:
-                uphill_prop += 1
+                st.uphill_prop += 1
             if d_e < 0 or (temp > 0 and rng.random() < math.exp(-d_e / temp)):
                 if d_e > 0:
-                    uphill_acc += 1
-                cost += d_cost
+                    st.uphill_acc += 1
+                st.cost += d_cost
                 if hetero:
-                    used, ovf = used2, ovf2
+                    st.used, st.ovf = used2, ovf2
                 if tl:
                     sol.touch(*tl)
                     bins = sol.bins
@@ -399,24 +526,51 @@ class SimulatedAnnealingPacker:
             else:
                 undo_swap_moves(sol, undo)
             if hetero:
-                improved = (cost - best_cost) + lam * (ovf - best_ovf) < 0
+                improved = (st.cost - st.best_cost) + lam * (st.ovf - st.best_ovf) < 0
             else:
-                improved = cost < best_cost
+                improved = st.cost < st.best_cost
             if improved:
-                best, best_cost, best_ovf = sol.copy(), cost, ovf
-                trace.append((time.perf_counter() - t_start,
-                              best_cost + lam * best_ovf if hetero else best_cost))
-                stale = 0
+                st.best, st.best_cost, st.best_ovf = sol.copy(), st.cost, st.ovf
+                st.trace.append((time.perf_counter() - st.t_start,
+                                 st.best_cost + lam * st.best_ovf if hetero
+                                 else st.best_cost))
+                st.stale = 0
             else:
-                stale += 1
-            it += 1
-        wall = time.perf_counter() - t_start
-        self.last_solution_ = sol
-        self.last_chains_ = [sol]
+                st.stale += 1
+            st.it += 1
+        if st.it >= self.max_iterations or st.stale >= self.patience:
+            st.done = True
+
+    def _single_finish(self, st: _SingleChainRun) -> PackingResult:
+        wall = time.perf_counter() - st.t_start
+        self.last_solution_ = st.sol
+        self.last_chains_ = [st.sol]
         return self._result(
-            best, best_cost, wall, trace, it, backend,
-            uphill=(uphill_prop, uphill_acc),
+            st.best, st.best_cost, wall, st.trace, st.it, st.backend,
+            uphill=(st.uphill_prop, st.uphill_acc),
         )
+
+    def _single_migrate(self, st: _SingleChainRun, sol: Solution) -> bool:
+        """Portfolio barrier hook for the single-chain engine; same contract
+        as `_scalar_migrate` (strictly-better only, frozen never revived)."""
+        if st.done or st.stale >= self.patience:
+            return False
+        lam = self.inventory_penalty
+        cost = int(sol.cost())
+        ovf = int(sol.inventory_overflow()) if st.hetero else 0
+        if cost + lam * ovf >= st.cost + lam * st.ovf:
+            return False
+        st.sol = sol.copy()
+        st.cost = cost
+        st.sol.fill_geometry(st.chain_w[0], st.chain_h[0])
+        if st.hetero:
+            st.sol.fill_kinds(st.chain_k[0])
+            st.used = st.sol.used_primitives()
+            st.ovf = int(st.prob.overflow_units(st.used))
+        # patience-reference best absorbs the migrant (see _scalar_migrate)
+        if cost + lam * st.ovf < st.best_cost + lam * st.best_ovf:
+            st.best, st.best_cost, st.best_ovf = st.sol.copy(), cost, st.ovf
+        return True
 
     # -------------------------------------------- vectorized multi-chain engine
     def _chain_t0s(self) -> np.ndarray:
@@ -477,25 +631,45 @@ class SimulatedAnnealingPacker:
         and best-chain exchange stay independent; the delta-cost kernel and
         Metropolis rule run once over all ``P * C`` rows per step.  See
         docs/DESIGN.md section 10.
-        """
-        from repro.kernels.binpack_sa_step.ops import metropolis_mask, sa_step_deltas
 
-        n_probs = len(probs)
+        Implemented as `_block_start` + `_block_run` + `_block_finish`;
+        ``core.portfolio`` replicates one problem K times through the same
+        helpers and pauses `_block_run` at migration barriers.
+        """
+        st = self._block_start(probs, rngs, inits, backend)
+        self._block_run(st)
+        return self._block_finish(st)
+
+    def _block_start(
+        self,
+        probs: Sequence[PackingProblem],
+        rngs: Sequence[np.random.Generator],
+        inits: Sequence[Sequence[Solution]],
+        backend: str,
+        n_slots: int | None = None,
+    ) -> _BlockState:
+        """Encode a fleet's chain state; ``n_slots`` widens the bin-slot
+        envelope (the portfolio passes ``prob.n`` so any migrant fits —
+        envelope padding never affects trajectories, see DESIGN.md §10)."""
+        st = _BlockState()
+        n_probs = st.n_probs = len(probs)
         n_chains = self.n_chains
-        n_rows = n_probs * n_chains
-        n_moves = max(self.swap_moves, 1)
-        width = 2 * n_moves
-        interpret = backend == "pallas" and _default_jax_backend() != "tpu"
-        batch = encode_problem_batch(probs)
-        hetero = batch.n_kinds > 1
+        n_rows = st.n_rows = n_probs * n_chains
+        st.n_moves = max(self.swap_moves, 1)
+        width = 2 * st.n_moves
+        st.probs = list(probs)
+        st.rngs = list(rngs)
+        st.backend = backend
+        st.interpret = backend == "pallas" and _default_jax_backend() != "tpu"
+        batch = st.batch = encode_problem_batch(probs)
+        hetero = st.hetero = batch.n_kinds > 1
         lam = self.inventory_penalty
-        pk = self.p_kind if hetero else 0.0
-        kt = batch.kind_tables if hetero else None
-        modes0 = batch.kind_tables[0][1]  # == BRAM18_MODES on default problems
-        n_kinds = batch.n_kinds
-        cap_max = batch.cap_max
-        any_bounded = bool((batch.kind_counts >= 0).any())
-        t_start = time.perf_counter()
+        st.kt = batch.kind_tables if hetero else None
+        st.modes0 = batch.kind_tables[0][1]  # == BRAM18_MODES on defaults
+        st.n_kinds = batch.n_kinds
+        st.cap_max = batch.cap_max
+        st.any_bounded = bool((batch.kind_counts >= 0).any())
+        st.t_start = time.perf_counter()
 
         # --- per-problem chain init: warm starts first, fresh NFD for the rest
         sols: list[Solution] = []
@@ -513,20 +687,100 @@ class SimulatedAnnealingPacker:
                 for c in range(len(mine), n_chains)
             ]
             sols.extend(mine)
-        items, counts = encode_chain_items(sols, cap_max)
-        bw, bh, live = encode_chain_geometry(sols, items.shape[1])
-        costs = np.asarray([s.cost() for s in sols], dtype=np.int64)
+        st.items, st.counts = encode_chain_items(sols, st.cap_max, n_slots=n_slots)
+        st.bw, st.bh, st.live = encode_chain_geometry(sols, st.items.shape[1])
+        st.costs = np.asarray([s.cost() for s in sols], dtype=np.int64)
 
-        pi = np.repeat(np.arange(n_probs), n_chains)  # row -> problem index
-        caps_r = np.repeat(batch.max_items, n_chains)  # per-row cardinality
+        st.pi = np.repeat(np.arange(n_probs), n_chains)  # row -> problem index
+        st.caps_r = np.repeat(batch.max_items, n_chains)  # per-row cardinality
         # buffer lookup tables with a zero/empty sentinel in the last column;
         # a single-problem fleet keeps the flat 1-D tables (PR 2's hot path)
         wext, dext, lext = batch.ext_tables()
         if n_probs == 1:
-            wtab, dtab, ltab = wext[0], dext[0], lext[0]
+            st.wtab, st.dtab, st.ltab = wext[0], dext[0], lext[0]
         else:
-            wtab, dtab, ltab = wext, dext, lext
-        sentinel = wtab.shape[-1] - 1
+            st.wtab, st.dtab, st.ltab = wext, dext, lext
+        st.sentinel = st.wtab.shape[-1] - 1
+
+        if hetero:
+            # per-chain RAM-kind lane + per-kind primitive usage (R, K)
+            st.bk = encode_chain_kinds(sols, st.items.shape[1])
+            st.UK = np.stack([s.used_primitives() for s in sols])
+            st.pcosts = st.costs + lam * batch.overflow_rows(st.UK, st.pi)
+        else:
+            st.bk = None
+            st.UK = None
+            st.pcosts = st.costs
+
+        st.best_pcosts = st.pcosts.copy()  # per-chain best (drives patience)
+        st.poff = np.arange(n_probs) * n_chains
+        gis = st.pcosts.reshape(n_probs, n_chains).argmin(axis=1) + st.poff
+        st.gbest_pcost = st.pcosts[gis].copy()  # per-problem global best
+        st.gbest_cost = st.costs[gis].copy()
+        st.g_items = st.items[gis].copy()
+        st.g_counts = st.counts[gis].copy()
+        st.g_live = st.live[gis].copy()
+        st.g_kinds = st.bk[gis].copy() if hetero else None
+        st.g_UK = st.UK[gis].copy() if hetero else None
+        # hetero traces record the penalized cost (monotone); raw otherwise
+        now = time.perf_counter() - st.t_start
+        st.traces = [
+            [(now, float(st.gbest_pcost[j]) if hetero else int(st.gbest_cost[j]))]
+            for j in range(n_probs)
+        ]
+        st.t0s = np.tile(self._chain_t0s(), n_probs)
+        st.ri = np.arange(n_rows)
+        st.stale = np.zeros(n_rows, dtype=np.int64)
+        st.steps = np.zeros(n_rows, dtype=np.int64)
+        st.tslots = np.zeros((n_rows, width), dtype=np.int64)
+        st.entry_ok = np.zeros((n_rows, width), dtype=bool)
+        st.up_prop = np.zeros(n_probs, dtype=np.int64)
+        st.up_acc = np.zeros(n_probs, dtype=np.int64)
+        st.n_u = 6 if hetero else 4
+        st.u_all = np.zeros((st.n_moves, st.n_u, n_rows))
+        st.u_metro = np.zeros(n_rows)
+        st.it = 0
+        st.done = False
+        st.frozen = False
+        return st
+
+    def _block_run(self, st: _BlockState, it_limit: int | None = None) -> None:
+        """Advance the fleet until ``it_limit`` (a portfolio barrier), the
+        iteration budget, the wall cap, or fleet-wide freezing.  All state
+        lives in ``st``, so a barriered run is bit-identical to an
+        uninterrupted one."""
+        from repro.kernels.binpack_sa_step.ops import metropolis_mask, sa_step_deltas
+
+        limit = (
+            self.max_iterations if it_limit is None
+            else min(self.max_iterations, it_limit)
+        )
+        n_probs, n_chains, n_rows = st.n_probs, self.n_chains, st.n_rows
+        n_moves, width = st.n_moves, 2 * st.n_moves
+        backend, interpret = st.backend, st.interpret
+        batch, probs, rngs = st.batch, st.probs, st.rngs
+        hetero, kt, modes0 = st.hetero, st.kt, st.modes0
+        lam = self.inventory_penalty
+        pk = self.p_kind if hetero else 0.0
+        n_kinds, any_bounded = st.n_kinds, st.any_bounded
+        t_start = st.t_start
+        pi, caps_r = st.pi, st.caps_r
+        wtab, dtab, ltab, sentinel = st.wtab, st.dtab, st.ltab, st.sentinel
+        poff, t0s, ri = st.poff, st.t0s, st.ri
+        tslots, entry_ok = st.tslots, st.entry_ok
+        up_prop, up_acc = st.up_prop, st.up_acc
+        n_u, u_all, u_metro = st.n_u, st.u_all, st.u_metro
+        traces = st.traces
+        gbest_pcost, gbest_cost = st.gbest_pcost, st.gbest_cost
+        g_items, g_counts, g_live = st.g_items, st.g_counts, st.g_live
+        g_kinds, g_UK, UK = st.g_kinds, st.g_UK, st.UK
+        steps = st.steps
+        # rebound across iterations — written back to st on every exit
+        items, counts = st.items, st.counts
+        bw, bh, live, bk = st.bw, st.bh, st.live, st.bk
+        costs, pcosts = st.costs, st.pcosts
+        best_pcosts, stale = st.best_pcosts, st.stale
+        it = st.it
 
         def row_lookup(tab, ids):
             """Per-row buffer-table gather (ids row-aligned, any rank)."""
@@ -535,54 +789,18 @@ class SimulatedAnnealingPacker:
             rows = pi.reshape((n_rows,) + (1,) * (ids.ndim - 1))
             return tab[rows, ids]
 
-        if hetero:
-            # per-chain RAM-kind lane + per-kind primitive usage (R, K)
-            bk = encode_chain_kinds(sols, items.shape[1])
-            UK = np.stack([s.used_primitives() for s in sols])
+        def ovf_rows(uk):
+            return batch.overflow_rows(uk, pi)
 
-            def ovf_rows(uk):
-                return batch.overflow_rows(uk, pi)
-
-            pcosts = costs + lam * ovf_rows(UK)
-        else:
-            bk = None
-            UK = None
-            pcosts = costs
-
-        best_pcosts = pcosts.copy()  # per-chain best (drives per-chain patience)
-        poff = np.arange(n_probs) * n_chains
-        gis = pcosts.reshape(n_probs, n_chains).argmin(axis=1) + poff
-        gbest_pcost = pcosts[gis].copy()  # per-problem global best
-        gbest_cost = costs[gis].copy()
-        g_items = items[gis].copy()
-        g_counts = counts[gis].copy()
-        g_live = live[gis].copy()
-        g_kinds = bk[gis].copy() if hetero else None
-        g_UK = UK[gis].copy() if hetero else None
-        # hetero traces record the penalized cost (monotone); raw otherwise
-        now = time.perf_counter() - t_start
-        traces = [
-            [(now, float(gbest_pcost[j]) if hetero else int(gbest_cost[j]))]
-            for j in range(n_probs)
-        ]
-        t0s = np.tile(self._chain_t0s(), n_probs)
-        ri = np.arange(n_rows)
-        stale = np.zeros(n_rows, dtype=np.int64)
-        steps = np.zeros(n_rows, dtype=np.int64)
-        tslots = np.zeros((n_rows, width), dtype=np.int64)
-        entry_ok = np.zeros((n_rows, width), dtype=bool)
-        up_prop = np.zeros(n_probs, dtype=np.int64)
-        up_acc = np.zeros(n_probs, dtype=np.int64)
-        n_u = 6 if hetero else 4
-        u_all = np.zeros((n_moves, n_u, n_rows))
-        u_metro = np.zeros(n_rows)
-        it = 0
-        while it < self.max_iterations:
+        while it < limit:
             if (it & 0xFF) == 0 and time.perf_counter() - t_start > self.max_seconds:
+                st.done = True
                 break
             active = stale < self.patience
             act_p = active.reshape(n_probs, n_chains).any(axis=1)
             if not act_p.any():
+                st.frozen = True
+                st.done = True
                 break
             # --- propose: each live problem draws one uniform block from its
             # own stream (two extra rows — kind-move gate and kind pick —
@@ -815,30 +1033,85 @@ class SimulatedAnnealingPacker:
                     bk = np.take_along_axis(bk, order, 1)
                 live = (counts > 0).sum(1)
             it += 1
-        wall = time.perf_counter() - t_start
+        # --- write the rebound loop state back (in-place arrays already land
+        # in st; these are the names the loop rebinds)
+        st.items, st.counts = items, counts
+        st.bw, st.bh, st.live, st.bk = bw, bh, live, bk
+        st.costs, st.pcosts = costs, pcosts
+        st.best_pcosts, st.stale = best_pcosts, stale
+        st.it = it
+        if it >= self.max_iterations:
+            st.done = True
+
+    def _block_finish(self, st: _BlockState) -> list[_BlockOut]:
+        wall = time.perf_counter() - st.t_start
+        hetero, n_chains = st.hetero, self.n_chains
         outs: list[_BlockOut] = []
-        for j in range(n_probs):
+        for j in range(st.n_probs):
             lo = j * n_chains
             chains = [
                 decode_chain_items(
-                    probs[j], items[r], counts[r], bk[r] if hetero else None
+                    st.probs[j], st.items[r], st.counts[r],
+                    st.bk[r] if hetero else None,
                 )
                 for r in range(lo, lo + n_chains)
             ]
             gbest = decode_chain_items(
-                probs[j], g_items[j], g_counts[j], g_kinds[j] if hetero else None
+                st.probs[j], st.g_items[j], st.g_counts[j],
+                st.g_kinds[j] if hetero else None,
             )
             outs.append(_BlockOut(
                 best=gbest,
-                best_cost=int(gbest_cost[j]),
-                trace=traces[j],
-                iterations=int(steps[lo : lo + n_chains].sum()),
+                best_cost=int(st.gbest_cost[j]),
+                trace=st.traces[j],
+                iterations=int(st.steps[lo : lo + n_chains].sum()),
                 chains=chains,
-                incumbent=int(pcosts[lo : lo + n_chains].argmin()),
-                uphill=(int(up_prop[j]), int(up_acc[j])),
+                incumbent=int(st.pcosts[lo : lo + n_chains].argmin()),
+                uphill=(int(st.up_prop[j]), int(st.up_acc[j])),
                 wall=wall,
             ))
         return outs
+
+    def _block_frozen(self, st: _BlockState, j: int) -> bool:
+        """True when fleet problem ``j`` has every chain past patience."""
+        lo = j * self.n_chains
+        return not (st.stale[lo : lo + self.n_chains] < self.patience).any()
+
+    def _block_migrate(self, st: _BlockState, j: int, sol: Solution) -> bool:
+        """Portfolio barrier hook: land a migrant into fleet problem ``j``'s
+        worst chain slot iff it strictly beats that slot's penalized cost.
+        A frozen problem is never touched — and patience counters are never
+        reset — so migration cannot revive a problem that already stopped
+        drawing RNG (its trajectory stays exactly its standalone one)."""
+        if st.done or self._block_frozen(st, j):
+            return False
+        lam = self.inventory_penalty
+        n_chains = self.n_chains
+        lo = j * n_chains
+        r = lo + int(st.pcosts[lo : lo + n_chains].argmax())
+        cost = int(sol.cost())
+        ovf = int(sol.inventory_overflow()) if st.hetero else 0
+        if cost + lam * ovf >= st.pcosts[r]:
+            return False
+        nb = st.items.shape[1]
+        if len(sol.bins) > nb:  # cannot encode into this fleet's envelope
+            return False
+        items_row, counts_row = encode_chain_items([sol], st.cap_max, n_slots=nb)
+        st.items[r] = items_row[0]
+        st.counts[r] = counts_row[0]
+        st.live[r] = int((counts_row[0] > 0).sum())
+        sol.fill_geometry(st.bw[r], st.bh[r])
+        st.costs[r] = cost
+        if st.hetero:
+            sol.fill_kinds(st.bk[r])
+            st.UK[r] = sol.used_primitives()
+            st.pcosts[r] = cost + lam * st.batch.overflow_rows(
+                st.UK[r : r + 1], st.pi[r : r + 1]
+            )[0]
+        else:
+            st.pcosts[r] = cost  # pcosts aliases costs on single-kind fleets
+        st.best_pcosts[r] = min(st.best_pcosts[r], st.pcosts[r])
+        return True
 
     # ------------------------------------------------------------------ result
     def _result(self, best, best_cost, wall, trace, iterations, backend, uphill):

@@ -324,7 +324,7 @@ def test_portfolio_basic():
     assert prob.lower_bound() <= r.cost
     costs = [cc for _, cc in r.trace]
     assert all(a >= b for a, b in zip(costs, costs[1:]))
-    assert r.params["rounds"] >= 1
+    assert r.params["barriers"] >= 1
     assert len(r.params["islands"]) == 3
     assert r.algorithm.startswith("portfolio[")
 

@@ -1,0 +1,320 @@
+"""Fleet-native island portfolio: determinism, single-island bit-parity
+with standalone pack(), migration semantics, and the paper-quality gate.
+
+The load-bearing contracts (ISSUE 5 acceptance criteria):
+
+* ``pack_portfolio(prob, seed=s, ...)`` with iteration budgets is
+  bit-reproducible run-to-run — islands advance by iteration counts and
+  consume per-island RNG streams, so machine speed never enters.
+* A single-island portfolio is bit-identical to the corresponding
+  standalone ``pack()`` run (same engines, same streams, no migration).
+* Migration lands the global best in the worst warm slot of *other* live
+  islands only, never touches patience counters, and never revives a
+  frozen island.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.core as c
+from repro.core.ga import GeneticPacker
+from repro.core.portfolio import _SAFleetGroup
+from repro.core.sa import SimulatedAnnealingPacker
+
+# iteration-budgeted settings: max_seconds is an outer safety cap only, so
+# every run below is machine-independent and exactly reproducible
+_KW = dict(max_seconds=1e9, patience=10**9, backend="python")
+
+
+def _portfolio(prob, **kw):
+    merged = {**_KW, **kw}
+    return c.pack_portfolio(prob, **merged)
+
+
+# ------------------------------------------------------------- determinism
+def test_portfolio_bit_reproducible():
+    """Same seed, same budgets -> identical best cost, solution, trace,
+    iteration count across two runs (the acceptance pin)."""
+    prob = c.get_problem("CNV-W2A2")
+    kw = dict(n_islands=4, seed=0, sa_chains=4, migration_every=64,
+              max_iterations=1500, max_generations=30)
+    a = _portfolio(prob, **kw)
+    b = _portfolio(prob, **kw)
+    assert a.cost == b.cost
+    assert a.solution.bins == b.solution.bins
+    assert [cc for _, cc in a.trace] == [cc for _, cc in b.trace]
+    assert a.iterations == b.iterations
+    assert a.params["barriers"] == b.params["barriers"]
+    assert a.params["migrations"] == b.params["migrations"]
+    a.solution.validate()
+    assert a.solution.cost() == a.solution.cost_full() == a.cost
+    costs = [cc for _, cc in a.trace]
+    assert all(x >= y for x, y in zip(costs, costs[1:]))
+
+
+def test_portfolio_seed_changes_result_params():
+    """Different seeds derive different island streams (params record them)."""
+    prob = c.get_problem("CNV-W1A1")
+    kw = dict(n_islands=2, sa_chains=3, max_iterations=300, max_generations=10)
+    a = _portfolio(prob, seed=0, **kw)
+    b = _portfolio(prob, seed=5, **kw)
+    assert [i["seed"] for i in a.params["islands"]] == [0, 1]
+    assert [i["seed"] for i in b.params["islands"]] == [5, 6]
+
+
+# ------------------------------------------------- single-island bit-parity
+def test_single_island_ga_matches_pack():
+    prob = c.get_problem("CNV-W1A1")
+    kw = dict(max_generations=25, **_KW)
+    r = c.pack_portfolio(prob, islands=[c.IslandSpec("ga-nfd", seed=7)], **kw)
+    ref = c.pack(prob, "ga-nfd", seed=7, **kw)
+    assert r.cost == ref.cost
+    assert r.solution.bins == ref.solution.bins
+    assert r.iterations == ref.iterations
+
+
+def test_single_island_sa_s_single_chain_matches_pack():
+    prob = c.get_problem("CNV-W1A1")
+    kw = dict(max_iterations=400, **_KW)
+    r = c.pack_portfolio(prob, islands=[c.IslandSpec("sa-s", seed=5)],
+                         sa_chains=1, **kw)
+    ref = c.pack(prob, "sa-s", seed=5, n_chains=1, **kw)
+    assert r.cost == ref.cost
+    assert r.solution.bins == ref.solution.bins
+    assert r.iterations == ref.iterations
+
+
+def test_single_island_sa_s_multi_chain_matches_pack():
+    """The fleet lane: one sa-s island IS a P == 1 `_anneal_block` fleet."""
+    prob = c.get_problem("CNV-W2A2")
+    kw = dict(max_iterations=500, **_KW)
+    r = c.pack_portfolio(prob, islands=[c.IslandSpec("sa-s", seed=3)],
+                         sa_chains=4, **kw)
+    ref = c.pack(prob, "sa-s", seed=3, n_chains=4, **kw)
+    assert r.cost == ref.cost
+    assert r.solution.bins == ref.solution.bins
+    assert [cc for _, cc in r.trace][:-1] == [cc for _, cc in ref.trace]
+    assert r.iterations == ref.iterations
+
+
+def test_single_island_sa_nfd_matches_pack():
+    prob = c.get_problem("CNV-W1A1")
+    kw = dict(max_iterations=250, **_KW)
+    r = c.pack_portfolio(prob, islands=[c.IslandSpec("sa-nfd", seed=2)], **kw)
+    ref = c.pack(prob, "sa-nfd", seed=2, **kw)
+    assert r.cost == ref.cost
+    assert r.solution.bins == ref.solution.bins
+    assert r.iterations == ref.iterations
+
+
+def test_hetero_single_island_parity_bounded_inventory():
+    """Hetero-device portfolio on a bounded inventory: the single-island
+    fleet reproduces the standalone hetero trajectory incl. kind lanes."""
+    prob = c.get_problem("CNV-W1A1", device="U50")
+    kw = dict(max_iterations=400, **_KW)
+    r = c.pack_portfolio(prob, islands=[c.IslandSpec("sa-s", seed=4)],
+                         sa_chains=3, **kw)
+    ref = c.pack(prob, "sa-s", seed=4, n_chains=3, **kw)
+    assert r.cost == ref.cost
+    assert r.solution.bins == ref.solution.bins
+    assert list(r.solution.kinds) == list(ref.solution.kinds)
+    r.solution.validate()
+
+
+def test_hetero_portfolio_deterministic():
+    prob = c.get_problem("CNV-W2A2", device="ZU7EV")
+    kw = dict(n_islands=3, seed=0, sa_chains=3, max_iterations=600,
+              max_generations=12)
+    a = _portfolio(prob, **kw)
+    b = _portfolio(prob, **kw)
+    assert a.cost == b.cost
+    assert a.solution.bins == b.solution.bins
+    assert list(a.solution.kinds) == list(b.solution.kinds)
+    assert [cc for _, cc in a.trace] == [cc for _, cc in b.trace]
+    a.solution.validate()
+
+
+# --------------------------------------------------------------- migration
+def _fleet_of_two(prob, packer, seeds=(0, 1)):
+    return _SAFleetGroup(
+        packer, prob, [np.random.default_rng(s) for s in seeds], "python"
+    )
+
+
+def test_migrant_replaces_worst_warm_slot():
+    """`_block_migrate` lands a strictly-better migrant in the island's
+    worst chain slot (and only then)."""
+    prob = c.get_problem("CNV-W1A1")
+    packer = SimulatedAnnealingPacker(
+        perturbation="swap", backend="python", n_chains=3, seed=0,
+        max_seconds=1e9, patience=10**9, max_iterations=10**6,
+    )
+    packer._hetero = False
+    fleet = _fleet_of_two(prob, packer)
+    fleet.advance(100)
+    st = fleet.st
+    # a migrant strictly better than island 1's worst chain: use the global
+    # best of island 0 after more annealing than island 1 has seen
+    better = c.pack(prob, "sa-s", seed=9, n_chains=4, max_iterations=2000,
+                    **_KW).solution
+    lo = packer.n_chains  # island 1's rows
+    worst = lo + int(st.pcosts[lo : lo + 3].argmax())
+    worst_before = int(st.pcosts[worst])
+    assert better.cost() < worst_before
+    stale_before = st.stale.copy()
+    assert packer._block_migrate(st, 1, better)
+    assert int(st.pcosts[worst]) == better.cost()
+    assert int(st.costs[worst]) == better.cost()
+    # patience counters are untouched (migration cannot revive anything)
+    np.testing.assert_array_equal(st.stale, stale_before)
+    # a migrant that does not strictly beat the worst slot is refused
+    assert not packer._block_migrate(st, 1, prob.singleton_solution())
+
+
+def test_migration_never_revives_frozen_island():
+    """A frozen fleet island refuses migrants outright: its rows stop
+    changing and it draws no further RNG (the standalone-trajectory rule)."""
+    prob = c.get_problem("CNV-W1A1")
+    packer = SimulatedAnnealingPacker(
+        perturbation="swap", backend="python", n_chains=2, seed=0,
+        max_seconds=1e9, patience=30, max_iterations=10**6,
+    )
+    packer._hetero = False
+    fleet = _fleet_of_two(prob, packer)
+    fleet.advance(None)  # runs until both islands freeze
+    st = fleet.st
+    assert st.frozen and st.done
+    better = c.pack(prob, "sa-s", seed=9, n_chains=4, max_iterations=2000,
+                    **_KW).solution
+    items_before = st.items.copy()
+    assert not packer._block_migrate(st, 0, better)
+    assert not packer._block_migrate(st, 1, better)
+    np.testing.assert_array_equal(st.items, items_before)
+
+
+def test_scalar_and_ga_migrate_hooks_respect_frozen_and_strictness():
+    prob = c.get_problem("CNV-W1A1")
+    better = c.pack(prob, "sa-s", seed=9, n_chains=4, max_iterations=3000,
+                    **_KW).solution
+    # scalar SA island
+    sa = SimulatedAnnealingPacker(perturbation="nfd", seed=0, max_seconds=1e9,
+                                  patience=50, max_iterations=10**6)
+    sa._hetero = False
+    st = sa._scalar_start(prob, None)
+    sa._scalar_run(st, 20)
+    stale_before, trace_before = st.stale, len(st.trace)
+    assert sa._scalar_migrate(st, better)  # live + strictly better
+    assert st.cost == better.cost()
+    # the patience-reference best absorbs the migrant silently: no stale
+    # reset (directly or via the next improved-check), no trace entry
+    assert st.best_cost == better.cost()
+    assert st.stale == stale_before and len(st.trace) == trace_before
+    assert not sa._scalar_migrate(st, better)  # not strictly better now
+    sa._scalar_run(st)  # drain until frozen (patience)
+    assert st.done
+    prev = st.cost
+    assert not sa._scalar_migrate(st, prob.singleton_solution())
+    assert st.cost == prev
+    # GA island
+    ga = GeneticPacker(seed=0, backend="python", max_seconds=1e9,
+                       patience=10**9, max_generations=10**6)
+    run = ga._start_run(prob, np.random.default_rng(0), None, "python")
+    ga._eval_init(run, None)
+    sel_before = run.costs.copy()
+    worst = int(np.argmax(run.costs))
+    stale_before, trace_before = run.stale, len(run.trace)
+    assert ga._migrate_in(run, better)
+    assert run.costs[worst] == better.cost()
+    assert run.costs[worst] < sel_before[worst]
+    # best-tracking absorbed the migrant without a trace entry or stale
+    # reset, so the next _track_best cannot revive the run's patience
+    assert run.best_cost == better.cost()
+    assert run.stale == stale_before and len(run.trace) == trace_before
+    ga._track_best(run)
+    assert run.stale == stale_before + 1  # migrant is NOT an own improvement
+    run.done = True
+    assert not ga._migrate_in(run, prob.singleton_solution())
+
+
+def test_migration_disabled_sums_standalone_runs():
+    """``migration_every=0`` makes islands fully independent: the portfolio
+    equals the best of the standalone runs and sums their iterations."""
+    prob = c.get_problem("CNV-W1A1")
+    kw = dict(max_iterations=400, max_generations=15, **_KW)
+    specs = [c.IslandSpec("ga-nfd", seed=0), c.IslandSpec("sa-s", seed=1)]
+    r = c.pack_portfolio(prob, islands=specs, sa_chains=3,
+                         migration_every=0, **kw)
+    ga = c.pack(prob, "ga-nfd", seed=0, **kw)
+    sa = c.pack(prob, "sa-s", seed=1, n_chains=3, **kw)
+    assert r.cost == min(ga.cost, sa.cost)
+    assert r.iterations == ga.iterations + sa.iterations
+    assert r.params["migrations"] == 0
+
+
+# ------------------------------------------------------------- API plumbing
+def test_max_workers_deprecated():
+    prob = c.get_problem("CNV-W1A1")
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        r = _portfolio(prob, n_islands=1, seed=0, max_generations=5,
+                       max_workers=2)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    r.solution.validate()
+
+
+def test_portfolio_through_pack_and_sweep():
+    """api.pack routes 'portfolio'; a pack_sweep candidate can itself be a
+    portfolio (serial lane) and — being deterministic now — matches the
+    direct call exactly."""
+    probs = [c.get_problem("CNV-W1A1"), c.get_problem("CNV-W2A2")]
+    kw = dict(n_islands=2, sa_chains=3, max_iterations=300,
+              max_generations=10, **_KW)
+    sw = c.pack_sweep(probs, "portfolio", seed=0, max_seconds=1e9,
+                      backend="python", n_islands=2, sa_chains=3,
+                      max_iterations=300, max_generations=10, patience=10**9)
+    for prob, r in zip(probs, sw.results):
+        ref = c.pack_portfolio(prob, seed=0, **kw)
+        assert r.cost == ref.cost, prob.name
+        assert r.solution.bins == ref.solution.bins, prob.name
+
+
+def test_portfolio_threads_legacy_still_works():
+    prob = c.get_problem("CNV-W1A1")
+    r = c.pack_portfolio_threads(prob, n_islands=2, seed=0, max_seconds=0.8,
+                                 backend="python", sa_chains=3)
+    r.solution.validate()
+    assert r.algorithm.startswith("portfolio-threads[")
+    assert r.params["rounds"] >= 1
+
+
+# ------------------------------------------------------ paper-quality gate
+# Golden single-engine baselines (recorded from seeded, iteration-budgeted
+# runs of this repo): the portfolio must never do worse than the single
+# engine it hedges.  Budgets are iteration counts, so the gate is
+# machine-independent; regressions in either the engines or the portfolio
+# trip it.
+_QUALITY_GOLDEN = {
+    # name: (ga-nfd golden cost @ max_generations, portfolio max_iterations)
+    "CNV-W1A1": (95, 120, 6000),
+    "RN50-W1A2": (1412, 40, 6000),
+}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", list(_QUALITY_GOLDEN))
+def test_portfolio_quality_gate(name):
+    golden, gens, iters = _QUALITY_GOLDEN[name]
+    prob = c.get_problem(name)
+    hp = c.hyperparams(name)
+    base = c.pack(prob, "ga-nfd", seed=0, max_generations=gens, **_KW, **hp)
+    assert base.cost == golden, (
+        f"single-engine baseline moved: {base.cost} != recorded {golden}"
+    )
+    islands = [c.IslandSpec("ga-nfd", seed=0), c.IslandSpec("sa-s", seed=1),
+               c.IslandSpec("sa-nfd", seed=2)]
+    r = c.pack_portfolio(prob, islands=islands, sa_chains=8,
+                         migration_every=64, max_generations=gens,
+                         max_iterations=iters, **_KW, **hp)
+    r.solution.validate()
+    assert prob.lower_bound() <= r.cost <= golden
