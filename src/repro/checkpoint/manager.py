@@ -8,18 +8,24 @@ Layout per step:  <dir>/step_000123/
 Guarantees:
 * atomic: written to step_x.tmp then os.rename'd — a crash mid-save never
   corrupts the latest checkpoint;
-* integrity: sha256 verified on restore;
+* integrity: sha256 verified on restore; ``restore()`` (and
+  ``restore_latest_valid()``) fall back to the newest step that passes the
+  sha256/shape checks, logging what was skipped — a torn or corrupted
+  latest step degrades gracefully instead of bricking the run;
 * mesh-agnostic restore: leaves are saved as full (unsharded) host arrays
   and re-placed with the *target* mesh's NamedShardings at load, so a run
   can restart on a different topology (elastic scaling);
 * async: save() can run on a background thread (wait() joins before the
-  next save);
+  next save and re-raises anything the previous write died on); an atexit
+  hook drains the in-flight write so interpreter shutdown can't tear it;
 * keep_n garbage collection of old steps.
 """
 from __future__ import annotations
 
+import atexit
 import hashlib
 import json
+import logging
 import os
 import shutil
 import threading
@@ -28,6 +34,10 @@ from pathlib import Path
 
 import jax
 import numpy as np
+
+logger = logging.getLogger(__name__)
+
+_BF16_SUFFIX = "::bf16"
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -40,7 +50,7 @@ def _flatten(tree) -> dict[str, np.ndarray]:
         )
         arr = np.asarray(leaf)
         if arr.dtype == jax.numpy.bfloat16:
-            out[key + "::bf16"] = arr.view(np.uint16)
+            out[key + _BF16_SUFFIX] = arr.view(np.uint16)
         else:
             out[key] = arr
     return out
@@ -53,15 +63,28 @@ class CheckpointManager:
         self.keep_n = keep_n
         self.async_save = async_save
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+        # a daemon writer thread dies mid-_write on normal interpreter exit,
+        # which is exactly the torn-file failure the atomic rename protocol
+        # exists to prevent — drain it before teardown
+        atexit.register(self._drain)
 
     # ---------------------------------------------------------------- save
     def save(self, step: int, state, extra: dict | None = None) -> None:
-        """Snapshot `state` (any pytree) + JSON-serializable `extra`."""
+        """Snapshot `state` (any pytree) + JSON-serializable `extra`.
+
+        With ``async_save`` the write happens on a background thread; a
+        failure there is re-raised by the *next* ``save()``/``wait()`` call
+        rather than swallowed (a sweep must not run for hours believing it
+        is checkpointed).
+        """
         host_flat = _flatten(state)  # device->host copy happens here, sync
-        self.wait()
+        self.wait()  # join the previous write; re-raise if it failed
         if self.async_save:
             self._thread = threading.Thread(
-                target=self._write, args=(step, host_flat, extra or {}), daemon=True
+                target=self._write_guarded,
+                args=(step, host_flat, extra or {}),
+                daemon=True,
             )
             self._thread.start()
         else:
@@ -71,6 +94,27 @@ class CheckpointManager:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _drain(self) -> None:
+        """atexit hook: finish the in-flight background write, never raise."""
+        thread = self._thread
+        if thread is not None:
+            thread.join()
+            self._thread = None
+        if self._error is not None:
+            logger.error(
+                "checkpoint background write under %s failed at exit: %r",
+                self.dir, self._error,
+            )
+
+    def _write_guarded(self, step: int, flat: dict, extra: dict) -> None:
+        try:
+            self._write(step, flat, extra)
+        except BaseException as e:  # surfaced by the next save()/wait()
+            self._error = e
 
     def _write(self, step: int, flat: dict, extra: dict) -> None:
         final = self.dir / f"step_{step:08d}"
@@ -100,16 +144,51 @@ class CheckpointManager:
 
     # -------------------------------------------------------------- restore
     def all_steps(self) -> list[int]:
+        """Steps with a complete on-disk snapshot.
+
+        Half-written ``.tmp`` dirs, half-deleted dirs (missing
+        ``manifest.json`` or ``arrays.npz`` — e.g. a crash mid-``_gc``),
+        and stray non-step paths are all ignored.
+        """
         out = []
         for p in self.dir.glob("step_*"):
-            if p.suffix == ".tmp" or not (p / "manifest.json").exists():
+            if p.suffix == ".tmp":
                 continue
-            out.append(int(p.name.split("_")[1]))
+            if not (p / "manifest.json").is_file() or not (p / "arrays.npz").is_file():
+                continue
+            try:
+                out.append(int(p.name.split("_", 1)[1]))
+            except ValueError:
+                continue
         return sorted(out)
 
     def latest_step(self) -> int | None:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def load(self, step: int) -> tuple[dict[str, np.ndarray], dict]:
+        """Integrity-checked raw read of one step.
+
+        Returns ``(flat, manifest)`` where ``flat`` maps flattened tree-path
+        keys to host arrays (bf16 views restored).  Raises ``IOError`` on a
+        sha256 mismatch — callers wanting graceful degradation go through
+        :meth:`restore_latest_valid`.
+        """
+        path = self.dir / f"step_{step:08d}"
+        manifest = json.loads((path / "manifest.json").read_text())
+        blob = (path / "arrays.npz").read_bytes()
+        if hashlib.sha256(blob).hexdigest() != manifest["sha256"]:
+            raise IOError(f"checkpoint {path} failed integrity check")
+        flat: dict[str, np.ndarray] = {}
+        with np.load(path / "arrays.npz") as arrays:
+            for key in arrays.files:
+                if key.endswith(_BF16_SUFFIX):
+                    flat[key[: -len(_BF16_SUFFIX)]] = arrays[key].view(
+                        jax.numpy.bfloat16
+                    )
+                else:
+                    flat[key] = arrays[key]
+        return flat, manifest
 
     def restore(
         self, like, step: int | None = None, shardings=None
@@ -118,17 +197,13 @@ class CheckpointManager:
 
         Returns (step, state, extra).  With `shardings` (a matching pytree
         of NamedSharding) every leaf is placed sharded on the target mesh —
-        the elastic-restart path.
+        the elastic-restart path.  Without an explicit ``step`` this is
+        :meth:`restore_latest_valid`: a corrupt latest step falls back to
+        the newest step that passes the integrity/shape checks.
         """
-        step = step if step is not None else self.latest_step()
         if step is None:
-            raise FileNotFoundError(f"no checkpoints under {self.dir}")
-        path = self.dir / f"step_{step:08d}"
-        manifest = json.loads((path / "manifest.json").read_text())
-        blob = (path / "arrays.npz").read_bytes()
-        if hashlib.sha256(blob).hexdigest() != manifest["sha256"]:
-            raise IOError(f"checkpoint {path} failed integrity check")
-        arrays = np.load(path / "arrays.npz")
+            return self.restore_latest_valid(like, shardings=shardings)
+        flat, manifest = self.load(step)
 
         flat_like = jax.tree_util.tree_flatten_with_path(like)
         leaves = []
@@ -140,10 +215,7 @@ class CheckpointManager:
                 str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p))
                 for p in kpath
             )
-            if key + "::bf16" in arrays:
-                arr = arrays[key + "::bf16"].view(jax.numpy.bfloat16)
-            else:
-                arr = arrays[key]
+            arr = flat[key]
             if tuple(arr.shape) != tuple(leaf.shape):
                 raise ValueError(
                     f"shape mismatch restoring {key}: ckpt {arr.shape} vs {leaf.shape}"
@@ -153,3 +225,38 @@ class CheckpointManager:
             leaves.append(arr)
         state = jax.tree_util.tree_unflatten(flat_like[1], leaves)
         return step, state, manifest.get("extra", {})
+
+    def restore_latest_valid(
+        self, like=None, shardings=None
+    ) -> tuple[int, object, dict]:
+        """Restore the newest step passing the sha256/shape checks.
+
+        Corrupt or torn steps (bad hash, unreadable manifest/npz, shape
+        mismatch against ``like``) are skipped with a warning — the crash-
+        recovery contract is "degrade to the newest intact checkpoint",
+        never "refuse to resume".  With ``like=None`` the raw flat
+        ``{tree-path: array}`` dict is returned instead of an unflattened
+        tree (the engine-state resume path, which knows its own layout).
+        Raises ``FileNotFoundError`` when the directory has no steps at
+        all, ``IOError`` when every step is damaged.
+        """
+        steps = self.all_steps()
+        last_err: Exception | None = None
+        for step in reversed(steps):
+            try:
+                if like is None:
+                    flat, manifest = self.load(step)
+                    return step, flat, manifest.get("extra", {})
+                return self.restore(like, step=step, shardings=shardings)
+            except Exception as e:
+                last_err = e
+                logger.warning(
+                    "skipping corrupt checkpoint step %d under %s: %s",
+                    step, self.dir, e,
+                )
+        if last_err is not None:
+            raise IOError(
+                f"no valid checkpoint under {self.dir} "
+                f"({len(steps)} step(s) damaged; newest error: {last_err})"
+            )
+        raise FileNotFoundError(f"no checkpoints under {self.dir}")

@@ -168,23 +168,48 @@ def _group_by_cost_model(indices, problems) -> list[list[int]]:
     return list(groups.values())
 
 
-def _solve_sa_groups(packer, groups, problems, seeds, backend) -> dict[int, PackingResult]:
+def _solve_sa_groups(
+    packer, groups, problems, seeds, backend, keys=None, ck=None
+) -> dict[int, PackingResult]:
     out: dict[int, PackingResult] = {}
     for group in groups:
         probs = [problems[i] for i in group]
         rngs = [np.random.default_rng(seeds[i]) for i in group]
         packer._hetero = probs[0].n_kinds > 1
-        blocks = packer._anneal_block(probs, rngs, [[] for _ in group], backend)
+        if ck is None:
+            blocks = packer._anneal_block(probs, rngs, [[] for _ in group], backend)
+        else:
+            # checkpointed lane: same start/run/finish phases, but paused at
+            # iteration barriers for durable snapshots.  Barrier segmentation
+            # never changes trajectories (the PR-5 resumable-engine contract),
+            # so results stay bit-identical to the uncheckpointed lane.
+            from .resume import encode_block_state, group_digest
+
+            gd = group_digest([keys[i] for i in group])
+            st = packer._block_start(probs, rngs, [[] for _ in group], backend)
+            ck.restore_block(gd, st)  # overwrite from snapshot if it matches
+            while not st.done:
+                packer._block_run(st, (st.it // ck.every + 1) * ck.every)
+                if not st.done:
+                    arrays, extra = encode_block_state(st)
+                    ck.save_progress(group=gd, arrays=arrays, engine=extra)
+            blocks = packer._block_finish(st)
         for i, blk in zip(group, blocks):
             packer.seed = seeds[i]  # per-problem seed lands in result params
             out[i] = packer._result(
                 blk.best, blk.best_cost, blk.wall, blk.trace,
                 blk.iterations, backend, uphill=blk.uphill,
             )
+            if ck is not None:
+                ck.mark_done(keys[i], out[i])
+        if ck is not None:
+            ck.save_progress()  # group complete: results only, no engine state
     return out
 
 
-def _solve_ga_groups(packer, groups, problems, seeds, backend) -> dict[int, PackingResult]:
+def _solve_ga_groups(
+    packer, groups, problems, seeds, backend, keys=None, ck=None
+) -> dict[int, PackingResult]:
     out: dict[int, PackingResult] = {}
     for group in groups:
         runs = [
@@ -200,11 +225,32 @@ def _solve_ga_groups(packer, groups, problems, seeds, backend) -> dict[int, Pack
         # live run one generation per call with one stacked fitness call —
         # the same helper the fleet-native portfolio barriers on
         pairs = [(packer, run) for run in runs]
-        while lockstep_generation(pairs):
-            pass
+        if ck is None:
+            while lockstep_generation(pairs):
+                pass
+        else:
+            from .resume import encode_ga_group, group_digest
+
+            gd = group_digest([keys[i] for i in group])
+            ck.restore_ga_group(gd, runs)
+            while True:
+                live = [run.gen for run in runs if not run.done]
+                if not live:
+                    break
+                glimit = (min(live) // ck.every + 1) * ck.every
+                while lockstep_generation(pairs, glimit):
+                    pass
+                if all(run.done for run in runs):
+                    break
+                arrays, extras = encode_ga_group(runs)
+                ck.save_progress(group=gd, arrays=arrays, engine=extras)
         for i, run in zip(group, runs):
             packer.seed = seeds[i]  # per-problem seed lands in result params
             out[i] = packer._finish_run(run)
+            if ck is not None:
+                ck.mark_done(keys[i], out[i])
+        if ck is not None:
+            ck.save_progress()
     return out
 
 
@@ -217,6 +263,10 @@ def pack_sweep(
     intra_layer: bool = False,
     backend: str = "auto",
     cache: dict | None = None,
+    checkpoint_dir: str | None = None,
+    checkpoint_every: int = 256,
+    resume: bool = False,
+    on_checkpoint=None,
     **hyper,
 ) -> SweepResult:
     """Solve a fleet of packing problems in one vectorized run.
@@ -242,6 +292,18 @@ def pack_sweep(
       changes throughput only — never answers (pinned in
       ``tests/test_dse.py``).
 
+    Crash safety (docs/DESIGN.md section 12): with ``checkpoint_dir`` the
+    sweep cuts a durable snapshot every ``checkpoint_every`` engine
+    iterations/generations (plus one per completed group) — completed
+    candidates and the in-flight batched group's full engine state.
+    ``resume=True`` restarts from the newest *intact* snapshot (corrupt or
+    torn steps are skipped) and, because every engine is deterministic from
+    any barrier state, lands on results **bit-identical** to an
+    uninterrupted same-seed run (pinned by ``tests/test_resume.py``).
+    ``on_checkpoint(step)`` fires after each durable write (the
+    fault-injection hook).  Resumed-from-checkpoint candidates count as
+    cache hits, not fresh solves.
+
     Returns a :class:`SweepResult` with per-candidate results (input order),
     an efficiency/Pareto table, and throughput counters.
     """
@@ -263,11 +325,26 @@ def pack_sweep(
 
     keys = _task_keys(problems, algorithm, seeds, intra_layer, backend,
                       max_seconds, hyper)
+    ck = None
+    if checkpoint_dir is not None:
+        from .resume import SweepCheckpointer, sweep_config_key
+
+        ck = SweepCheckpointer(
+            checkpoint_dir, sweep_config_key(keys), every=checkpoint_every,
+            resume=resume, on_checkpoint=on_checkpoint,
+        )
     results_by_key: dict[tuple, PackingResult] = {}
     if cache is not None:
         for k in set(keys):
             if k in cache:
                 results_by_key[k] = cache[k]
+    if ck is not None:
+        # candidates completed before the crash are served, not re-solved
+        for i, k in enumerate(keys):
+            if k not in results_by_key:
+                prev = ck.result_for(k, problems[i])
+                if prev is not None:
+                    results_by_key[k] = prev
     rep: dict[tuple, int] = {}  # first position of each unsolved unique task
     for i, k in enumerate(keys):
         if k not in results_by_key and k not in rep:
@@ -295,13 +372,19 @@ def pack_sweep(
         ):
             groups = _group_by_cost_model(todo, problems)
             n_groups = len(groups)
-            solved = _solve_sa_groups(packer, groups, problems, seeds, resolved)
+            solved = _solve_sa_groups(
+                packer, groups, problems, seeds, resolved, keys=keys, ck=ck
+            )
         elif algorithm in _GA_LOCKSTEP and resolved in ("ref", "pallas"):
             groups = _group_by_cost_model(todo, problems)
             n_groups = len(groups)
-            solved = _solve_ga_groups(packer, groups, problems, seeds, resolved)
+            solved = _solve_ga_groups(
+                packer, groups, problems, seeds, resolved, keys=keys, ck=ck
+            )
         else:
-            # serial fallback: scalar/legacy engines, heuristics, portfolio
+            # serial fallback: scalar/legacy engines, heuristics, portfolio.
+            # Checkpoint granularity here is whole candidates: each finished
+            # solve is durable, an in-flight one restarts from scratch.
             n_groups = len(todo)
             for i in todo:
                 solved[i] = _pack(
@@ -309,6 +392,9 @@ def pack_sweep(
                     max_seconds=max_seconds, intra_layer=intra_layer,
                     backend=backend, **hyper,
                 )
+                if ck is not None:
+                    ck.mark_done(keys[i], solved[i])
+                    ck.save_progress()
         for i, res in solved.items():
             results_by_key[keys[i]] = res
             if cache is not None:

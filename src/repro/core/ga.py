@@ -723,7 +723,21 @@ class _GARun:
     """One problem's GA state, advanced generation-wise by the phase helpers
     of `GeneticPacker` (its own `pack()` loop, `core.dse`'s lockstep
     multi-problem driver, or `core.portfolio`'s island driver — all through
-    :func:`lockstep_generation`-compatible phases)."""
+    :func:`lockstep_generation`-compatible phases).
+
+    ``CODEC_*`` is the serialization contract consumed by ``core.resume``:
+    ``costs``/``fits`` (and ``ovfs`` on heterogeneous problems) land in a
+    checkpoint's ``arrays.npz``; the scalars, RNG state, population, best
+    solution, and trace in its JSON manifest.  The geometry matrices
+    ``W``/``H``/``Km`` are refilled from the restored population, and
+    shared-reference aliasing inside ``pop`` (tournament winners) need not
+    survive serialization: mutation always replaces ``pop[i]`` with a fresh
+    object, never edits one in place.
+    """
+
+    CODEC_ARRAYS = ("costs", "fits")
+    CODEC_ARRAYS_HETERO = ("ovfs",)
+    CODEC_SCALARS = ("best_cost", "best_sel", "gen", "stale", "done")
 
     __slots__ = (
         "prob", "rng", "t0", "backend", "batched", "use_cache", "hetero",

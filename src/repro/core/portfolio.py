@@ -141,6 +141,12 @@ class _FleetIsland:
         st, c = self.group.st, self.packer.n_chains
         return int(st.steps[self.j * c : (self.j + 1) * c].sum())
 
+    def truncated(self) -> bool:
+        """True iff the fleet stopped on the wall-clock cap — done, but
+        neither frozen (patience) nor out of iteration budget."""
+        st = self.group.st
+        return st.done and not st.frozen and st.it < self.packer.max_iterations
+
 
 class _GAGroup:
     """All GA islands, advanced in lockstep with stacked fitness calls."""
@@ -185,6 +191,13 @@ class _GAIsland:
     def iterations(self) -> int:
         return self.run.gen
 
+    def truncated(self) -> bool:
+        return (
+            self.run.done
+            and self.run.gen < self.packer.max_generations
+            and self.run.stale < self.packer.patience
+        )
+
 
 class _ScalarIsland:
     """A scalar-loop or single-chain SA island (its own resumable state)."""
@@ -227,6 +240,13 @@ class _ScalarIsland:
     def iterations(self) -> int:
         return self.st.it
 
+    def truncated(self) -> bool:
+        return (
+            self.st.done
+            and self.st.it < self.packer.max_iterations
+            and self.st.stale < self.packer.patience
+        )
+
 
 def _merge_traces(parts: list[tuple[float, list]]) -> list:
     """Global monotone best-so-far trace across (offset, trace) parts."""
@@ -268,6 +288,10 @@ def pack_portfolio(
     backend: str = "auto",
     max_workers: int | None = None,
     sa_chains: int = 8,
+    checkpoint_dir: str | None = None,
+    checkpoint_every: int = 1,
+    resume: bool = False,
+    on_checkpoint=None,
     **hyper,
 ) -> PackingResult:
     """Run K differently-seeded islands as one fleet; return the best result.
@@ -305,6 +329,22 @@ def pack_portfolio(
     ``max_workers`` is deprecated and ignored: the fleet-native portfolio
     has no thread pool (see :func:`pack_portfolio_threads` for the legacy
     engine, kept as a benchmark baseline).
+
+    Crash safety (docs/DESIGN.md section 12): with ``checkpoint_dir`` the
+    run cuts a durable snapshot of every island's engine state (plus the
+    barrier/migration counters) every ``checkpoint_every`` migration
+    barriers; ``resume=True`` restarts from the newest *intact* snapshot
+    and — because barrier segmentation never changes trajectories — lands
+    on a result bit-identical to an uninterrupted same-seed run (pinned by
+    ``tests/test_resume.py``).  ``max_seconds`` is not part of the
+    checkpoint identity, so a preempted run may resume under a fresh wall
+    budget.  ``on_checkpoint(step)`` fires after each durable write.
+
+    If the wall-clock cap cuts any island short of its iteration/patience
+    budget, the result's ``params["truncated_by_wallclock"]`` is True and a
+    ``RuntimeWarning`` is emitted (``params["barriers"]`` records how many
+    migration barriers completed) — a truncated portfolio is NOT
+    bit-reproducible across machines.
     """
     from .api import make_packer  # late import: api imports nothing from here
 
@@ -330,6 +370,16 @@ def pack_portfolio(
         DEFAULT_MIGRATION_EVERY if migration_every is None
         else int(migration_every)
     )
+    ck = None
+    if checkpoint_dir is not None:
+        from .resume import PortfolioCheckpointer, portfolio_config_key
+
+        ck = PortfolioCheckpointer(
+            checkpoint_dir,
+            portfolio_config_key(prob, islands, interval, intra_layer,
+                                 backend, sa_chains, hyper),
+            every=checkpoint_every, resume=resume, on_checkpoint=on_checkpoint,
+        )
     hetero = prob.n_kinds > 1
     t0 = time.perf_counter()
 
@@ -409,12 +459,25 @@ def pack_portfolio(
     # --- barriered fleet loop: advance everything, then migrate
     barrier = 0
     migrations = 0
+    truncated = False
     single = len(adapters) == 1
+    if ck is not None:
+        restored = ck.restore_groups(groups)
+        if restored is not None:
+            barrier, migrations = restored
+    # with checkpointing, runs that would otherwise advance in one
+    # unbounded call (single island, or migration disabled) still pause at
+    # DEFAULT_MIGRATION_EVERY-iteration barriers purely to cut snapshots —
+    # barrier segmentation never changes trajectories (PR-5 contract)
+    seg = interval if interval > 0 else (
+        DEFAULT_MIGRATION_EVERY if ck is not None else 0
+    )
     while any(not isl.done() for isl in adapters):
         if barrier > 0 and time.perf_counter() - t0 > max_seconds:
+            truncated = True
             break
         barrier += 1
-        limit = None if (single or interval <= 0) else barrier * interval
+        limit = None if ((single and ck is None) or seg <= 0) else barrier * seg
         progressed = [g.advance(limit) for g in groups]
         if not single and interval > 0:
             # deterministic migration: strict-min global best (first island
@@ -425,11 +488,26 @@ def pack_portfolio(
             for k, isl in enumerate(adapters):
                 if k != src:
                     migrations += isl.migrate_in(migrant)
+        if ck is not None and barrier % ck.every == 0:
+            ck.save_groups(groups, barrier, migrations)
         if not any(progressed):
             break  # no island can move: budgets exhausted mid-barrier
 
     # --- assemble the portfolio result (strict-min, first island wins ties)
     wall = time.perf_counter() - t0
+    # the outer cap above, or any island's own engine hitting its wall cap
+    # short of its iteration/patience budget, silently breaks seed-level
+    # reproducibility — surface it instead (satellite of DESIGN.md sec. 12)
+    truncated = truncated or any(isl.truncated() for isl in adapters)
+    if truncated:
+        warnings.warn(
+            f"pack_portfolio stopped on wall-clock after {barrier} "
+            "barrier(s) before the islands' iteration/patience budgets; the "
+            "result is NOT seed-reproducible (params['truncated_by_wallclock']"
+            " is True). Give islands iteration budgets for reproducible runs.",
+            RuntimeWarning,
+            stacklevel=2,
+        )
     raws = [isl.raw() for isl in adapters]
     vals = [c + lam * o for c, o in raws]
     best_k = min(range(len(vals)), key=vals.__getitem__)
@@ -453,6 +531,7 @@ def pack_portfolio(
             barriers=barrier,
             migration_every=interval,
             migrations=migrations,
+            truncated_by_wallclock=truncated,
             backend=backend,
             seed=seed,
         ),

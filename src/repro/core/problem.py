@@ -499,6 +499,23 @@ class Solution:
         self._total_cost = None
         return self
 
+    def state_dict(self) -> dict:
+        """JSON-able serialization of the packing itself: bins + kind lane.
+
+        Geometry caches are derived state and deliberately not serialized —
+        a solution rebuilt by :meth:`from_state_dict` starts cold and
+        re-derives the exact same integer costs (the checkpoint/resume
+        layer in ``core.resume`` round-trips through this pair).
+        """
+        return {
+            "bins": [[int(i) for i in b] for b in self.bins],
+            "kinds": [int(k) for k in self.kinds],
+        }
+
+    @classmethod
+    def from_state_dict(cls, problem: PackingProblem, state: dict) -> "Solution":
+        return cls(problem, state["bins"], state["kinds"])
+
     def copy(self) -> "Solution":
         out = Solution._with_geometry(
             self.problem,

@@ -119,22 +119,58 @@ class _BlockState:
     matrices, per-problem RNG streams, best tracking, and patience counters
     live here, so pausing at a barrier and resuming is bit-identical to one
     uninterrupted run — the contract the fleet-native portfolio builds on.
+
+    ``CODEC_*`` is the serialization contract consumed by ``core.resume``:
+    array fields land in a checkpoint's ``arrays.npz``, scalar fields (plus
+    RNG bit-generator states and traces, handled explicitly by the codec)
+    in its JSON manifest.  Everything else — scratch buffers refilled every
+    step (``tslots``/``entry_ok``/``u_all``/``u_metro``), start-derived
+    constants (tables, ladders, row maps), and the problems themselves — is
+    rebuilt deterministically by `_block_start` and never serialized.
     """
 
     done: bool = False      # budget/wall exhausted or every problem frozen
     frozen: bool = False    # every problem past patience (subset of done)
 
+    CODEC_ARRAYS = (
+        "items", "counts", "bw", "bh", "live", "costs", "best_pcosts",
+        "stale", "steps", "gbest_pcost", "gbest_cost", "g_items",
+        "g_counts", "g_live", "up_prop", "up_acc",
+    )
+    CODEC_ARRAYS_HETERO = ("pcosts", "bk", "UK", "g_kinds", "g_UK")
+    CODEC_SCALARS = ("it", "done", "frozen")
+
 
 class _ScalarRun:
-    """Resumable state of the scalar SA loop (one chain, Solution copies)."""
+    """Resumable state of the scalar SA loop (one chain, Solution copies).
+
+    ``CODEC_*``: the ``core.resume`` serialization contract (see
+    `_BlockState`); ``sol``/``best`` serialize as bins + kind lanes, with
+    geometry caches rebuilt cold on restore.
+    """
 
     done: bool = False
+
+    CODEC_SCALARS = ("cost", "ovf", "best_cost", "best_ovf", "it", "stale",
+                     "done")
+    CODEC_SOLUTIONS = ("sol", "best")
 
 
 class _SingleChainRun:
-    """Resumable state of the single-chain delta engine."""
+    """Resumable state of the single-chain delta engine.
+
+    ``CODEC_*``: the ``core.resume`` serialization contract (see
+    `_BlockState`).  The geometry rows (``chain_w``/``chain_h``/``chain_k``)
+    and primitive usage (``used``) are derived from ``sol`` on restore; the
+    ``undo`` log and delta scratch rows are per-iteration transients, and
+    barriers always fall between iterations.
+    """
 
     done: bool = False
+
+    CODEC_SCALARS = ("cost", "ovf", "best_cost", "best_ovf", "uphill_prop",
+                     "uphill_acc", "it", "stale", "done")
+    CODEC_SOLUTIONS = ("sol", "best")
 
 
 class SimulatedAnnealingPacker:

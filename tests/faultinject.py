@@ -1,0 +1,74 @@
+"""Fault-injection helpers for the crash-safety tests (tests/test_resume.py).
+
+Two crash families:
+
+* **in-process**: :func:`crash_at` raises :class:`SimulatedCrash` (a
+  ``BaseException``, so no ``except Exception`` handler can swallow it) from
+  the ``on_checkpoint`` hook right after the Nth durable snapshot — the
+  instant a real SIGKILL is most interesting, because the run has state on
+  disk *and* state in flight;
+* **out-of-process**: ``tools/sweep_resume.py --die-at-checkpoint N`` sends
+  the process a genuine ``SIGKILL`` at the same point (used by the CI
+  resume-smoke lane, where an actual dead process is the fixture).
+
+Plus disk corruptors that damage the newest snapshot the way real crashes
+do — a torn ``arrays.npz``, a scribbled ``manifest.json``, a half-deleted
+step dir — so the tests can pin the degrade-to-newest-intact-checkpoint
+contract of ``CheckpointManager.restore_latest_valid``.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+
+class SimulatedCrash(BaseException):
+    """Raised by `crash_at` to model a SIGKILL at a checkpoint barrier."""
+
+
+def crash_at(n: int):
+    """An ``on_checkpoint`` hook that dies right after the Nth snapshot."""
+
+    def hook(step: int) -> None:
+        if step >= n:
+            raise SimulatedCrash(f"simulated crash after checkpoint {step}")
+
+    return hook
+
+
+def latest_step_dir(ckpt_dir: str | Path) -> Path:
+    """Newest complete ``step_XXXXXXXX`` dir under a checkpoint directory."""
+    steps = sorted(
+        p for p in Path(ckpt_dir).glob("step_*")
+        if p.is_dir() and p.suffix != ".tmp"
+    )
+    if not steps:
+        raise FileNotFoundError(f"no checkpoint steps under {ckpt_dir}")
+    return steps[-1]
+
+
+def tear_arrays(step_dir: str | Path) -> None:
+    """Truncate ``arrays.npz`` mid-file: a torn write / partial sector."""
+    f = Path(step_dir) / "arrays.npz"
+    blob = f.read_bytes()
+    f.write_bytes(blob[: max(len(blob) // 2, 1)])
+
+
+def corrupt_arrays(step_dir: str | Path) -> None:
+    """Flip bytes inside ``arrays.npz`` (silent media corruption): the file
+    stays full-length but no longer matches its manifest sha256."""
+    f = Path(step_dir) / "arrays.npz"
+    blob = bytearray(f.read_bytes())
+    mid = len(blob) // 2
+    blob[mid] ^= 0xFF
+    f.write_bytes(bytes(blob))
+
+
+def corrupt_manifest(step_dir: str | Path) -> None:
+    """Scribble over ``manifest.json`` (crash mid-metadata-write)."""
+    (Path(step_dir) / "manifest.json").write_text('{"truncated": tru')
+
+
+def half_delete(step_dir: str | Path) -> None:
+    """Remove ``arrays.npz`` but keep the dir (crash mid-GC)."""
+    (Path(step_dir) / "arrays.npz").unlink()

@@ -1,0 +1,134 @@
+"""Direct coverage of checkpoint/manager.py: atomicity leftovers, bf16
+round-trips, keep_n GC, integrity-failure fallback, and async-write error
+surfacing (the crash-safety substrate of docs/DESIGN.md section 12)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from faultinject import (
+    corrupt_arrays,
+    corrupt_manifest,
+    half_delete,
+    latest_step_dir,
+    tear_arrays,
+)
+from repro.checkpoint import CheckpointManager
+
+
+def _state(step: int) -> dict:
+    return {"w": np.arange(6, dtype=np.float32) + step, "b": np.int64(step)}
+
+
+def test_leftover_tmp_dir_is_replaced_and_ignored(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    stale = tmp_path / "step_00000001.tmp"
+    stale.mkdir()
+    (stale / "arrays.npz").write_bytes(b"torn half-write")
+    mgr.save(1, _state(1))
+    assert mgr.all_steps() == [1]
+    assert not stale.exists()  # the atomic rename consumed the retry's tmp
+    step, st, _ = mgr.restore(_state(0))
+    assert step == 1
+    np.testing.assert_array_equal(st["w"], _state(1)["w"])
+
+
+def test_bf16_roundtrip_exact(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    ref = jnp.asarray([1.5, -2.25, 3e-3, 65504.0], dtype=jnp.bfloat16)
+    mgr.save(1, {"x": ref})
+    _, st, _ = mgr.restore({"x": jnp.zeros(4, dtype=jnp.bfloat16)})
+    assert st["x"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(st["x"]).view(np.uint16), np.asarray(ref).view(np.uint16)
+    )
+
+
+def test_keep_n_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep_n=2, async_save=False)
+    for s in range(1, 6):
+        mgr.save(s, _state(s))
+    assert mgr.all_steps() == [4, 5]
+    assert mgr.latest_step() == 5
+
+
+def test_all_steps_ignores_tmp_half_deleted_and_stray(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep_n=0, async_save=False)
+    for s in (1, 2, 3):
+        mgr.save(s, _state(s))
+    (tmp_path / "step_00000009.tmp").mkdir()
+    (tmp_path / "step_bogus").mkdir()
+    half_delete(tmp_path / "step_00000002")  # arrays.npz gone, dir remains
+    assert mgr.all_steps() == [1, 3]
+
+
+@pytest.mark.parametrize(
+    "damage", [tear_arrays, corrupt_arrays, corrupt_manifest, half_delete]
+)
+def test_restore_falls_back_to_newest_intact_step(tmp_path, damage):
+    mgr = CheckpointManager(tmp_path, keep_n=0, async_save=False)
+    for s in (1, 2, 3):
+        mgr.save(s, _state(s))
+    damage(latest_step_dir(tmp_path))
+    step, st, _ = mgr.restore(_state(0))  # step=None -> latest valid
+    assert step == 2
+    np.testing.assert_array_equal(st["w"], _state(2)["w"])
+
+
+def test_restore_latest_valid_flat_mode(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    mgr.save(1, _state(1), extra={"kind": "test"})
+    mgr.save(2, _state(2), extra={"kind": "test2"})
+    corrupt_manifest(latest_step_dir(tmp_path))
+    step, flat, extra = mgr.restore_latest_valid()  # like=None: raw dict
+    assert step == 1 and extra == {"kind": "test"}
+    np.testing.assert_array_equal(flat["w"], _state(1)["w"])
+
+
+def test_every_step_damaged_raises_ioerror(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep_n=0, async_save=False)
+    mgr.save(1, _state(1))
+    mgr.save(2, _state(2))
+    corrupt_arrays(tmp_path / "step_00000001")
+    tear_arrays(tmp_path / "step_00000002")
+    with pytest.raises(IOError):
+        mgr.restore(_state(0))
+
+
+def test_no_steps_raises_filenotfound(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(_state(0))
+
+
+def test_explicit_step_still_raises_on_corruption(tmp_path):
+    # callers pinning a step opt out of the fallback: corruption must raise
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    mgr.save(1, _state(1))
+    corrupt_arrays(tmp_path / "step_00000001")
+    with pytest.raises(IOError):
+        mgr.restore(_state(0), step=1)
+
+
+def test_async_write_failure_surfaces_on_next_save(tmp_path):
+    mgr = CheckpointManager(tmp_path / "ck", async_save=True)
+    blocker = tmp_path / "blocker"
+    blocker.write_text("a file where the checkpoint dir should be")
+    mgr.dir = blocker / "sub"  # forces the background _write to fail
+    mgr.save(1, _state(1))  # enqueues; the failure lands in the background
+    with pytest.raises(OSError):
+        mgr.save(2, _state(2))  # surfaces the previous write's exception
+    mgr.dir = tmp_path / "ck"  # healthy again: save 2 was re-raised, not kept
+    mgr.save(3, _state(3))
+    mgr.wait()
+    assert mgr.all_steps() == [3]
+
+
+def test_wait_reraises_background_failure_once(tmp_path):
+    mgr = CheckpointManager(tmp_path / "ck", async_save=True)
+    blocker = tmp_path / "blocker"
+    blocker.write_text("x")
+    mgr.dir = blocker / "sub"
+    mgr.save(1, _state(1))
+    with pytest.raises(OSError):
+        mgr.wait()
+    mgr.wait()  # the error was consumed; a second wait is clean

@@ -1,0 +1,280 @@
+"""Crash-safe sweeps: bit-exact restart parity under fault injection.
+
+The acceptance contract (docs/DESIGN.md section 12): a checkpointed
+``pack_sweep`` / ``pack_portfolio`` killed at ANY barrier — including with
+its newest snapshot corrupted afterwards — resumes to the bit-identical
+final best cost, packing, iteration counts, and improvement-trace cost
+sequence of a same-seed uninterrupted run.  Wall-clock values (and the
+portfolio's wall-time-ordered merged trace) are exempt.
+
+Crashes here are in-process ``SimulatedCrash`` raises from the
+``on_checkpoint`` hook (tests/faultinject.py); the CI resume-smoke lane
+repeats the experiment with a real SIGKILL via ``tools/sweep_resume.py``.
+"""
+import numpy as np
+import pytest
+
+from faultinject import (
+    SimulatedCrash,
+    corrupt_arrays,
+    corrupt_manifest,
+    crash_at,
+    latest_step_dir,
+    tear_arrays,
+)
+from repro.core import IslandSpec, pack_portfolio, pack_sweep
+from repro.core.problem import (
+    BRAM18,
+    URAM288,
+    Buffer,
+    OCMInventory,
+    PackingProblem,
+)
+
+# deterministic engines: iteration budgets terminate, wall/patience parked
+_KW = dict(max_seconds=1e9, patience=10**9)
+_SA = dict(_KW, backend="python", max_iterations=600, n_chains=4)
+_GA = dict(_KW, backend="ref", max_generations=12, n_pop=12)
+
+
+def _problem(seed: int, hetero: bool = False) -> PackingProblem:
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(12, 30))
+    bufs = [
+        Buffer(width=int(rng.integers(1, 80)), depth=int(rng.integers(1, 40_000)),
+               layer=int(rng.integers(0, 5)))
+        for _ in range(n)
+    ]
+    ocm = (
+        OCMInventory((BRAM18, URAM288), (n * 3, 8), name=f"dev{seed}")
+        if hetero else None
+    )
+    return PackingProblem(bufs, max_items=4, name=f"rp{seed}", ocm=ocm)
+
+
+@pytest.fixture(scope="module")
+def problems():
+    return [_problem(s) for s in (11, 12, 13)]
+
+
+@pytest.fixture(scope="module")
+def sweep_ref(problems):
+    return _sweep_record(pack_sweep(problems, "sa-s", seed=3, **_SA))
+
+
+@pytest.fixture(scope="module")
+def ga_sweep_ref(problems):
+    return _sweep_record(pack_sweep(problems, "ga-nfd", seed=7, **_GA))
+
+
+# one island per engine codec: GA lockstep, SA fleet, scalar loop, single-chain
+_ISLANDS = [
+    IslandSpec("ga-nfd", seed=5),
+    IslandSpec("sa-s", seed=6),
+    IslandSpec("sa-nfd", seed=7),
+    IslandSpec("sa-s", seed=8, hyper={"n_chains": 1}),
+]
+_PORT = dict(_KW, backend="ref", migration_every=32, max_iterations=400,
+             max_generations=10, sa_chains=4)
+
+
+@pytest.fixture(scope="module")
+def portfolio_ref(problems):
+    return _portfolio_record(
+        pack_portfolio(problems[0], islands=_ISLANDS, **_PORT)
+    )
+
+
+def _sweep_record(sw):
+    """Everything the parity contract covers, nothing wall-clock."""
+    return [
+        (r.cost, r.solution.state_dict(), r.iterations,
+         [c for _, c in r.trace])
+        for r in sw.results
+    ]
+
+
+def _portfolio_record(res):
+    return (
+        res.cost, res.solution.state_dict(), res.iterations,
+        res.params["barriers"], res.params["migrations"],
+    )
+
+
+# ------------------------------------------------------------------ pack_sweep
+def test_sweep_checkpointing_is_trajectory_neutral(problems, sweep_ref, tmp_path):
+    got = pack_sweep(problems, "sa-s", seed=3, checkpoint_dir=tmp_path,
+                     checkpoint_every=150, **_SA)
+    assert _sweep_record(got) == sweep_ref
+
+
+@pytest.mark.parametrize("kill_after", [1, 2, 3])
+def test_sweep_sa_killed_at_barrier_resumes_bit_identical(
+    problems, sweep_ref, tmp_path, kill_after
+):
+    with pytest.raises(SimulatedCrash):
+        pack_sweep(problems, "sa-s", seed=3, checkpoint_dir=tmp_path,
+                   checkpoint_every=150, on_checkpoint=crash_at(kill_after),
+                   **_SA)
+    resumed = pack_sweep(problems, "sa-s", seed=3, checkpoint_dir=tmp_path,
+                         checkpoint_every=150, resume=True, **_SA)
+    assert _sweep_record(resumed) == sweep_ref
+
+
+@pytest.mark.parametrize("damage", [tear_arrays, corrupt_arrays, corrupt_manifest])
+def test_sweep_resume_with_corrupted_latest_checkpoint(
+    problems, sweep_ref, tmp_path, damage
+):
+    # killed at barrier 3, then the newest snapshot is damaged on disk: the
+    # resume must fall back to the older intact snapshot and STILL land on
+    # the bit-identical final result (engines are deterministic from any
+    # barrier state, so replaying a longer tail changes nothing)
+    with pytest.raises(SimulatedCrash):
+        pack_sweep(problems, "sa-s", seed=3, checkpoint_dir=tmp_path,
+                   checkpoint_every=150, on_checkpoint=crash_at(3), **_SA)
+    damage(latest_step_dir(tmp_path))
+    resumed = pack_sweep(problems, "sa-s", seed=3, checkpoint_dir=tmp_path,
+                         checkpoint_every=150, resume=True, **_SA)
+    assert _sweep_record(resumed) == sweep_ref
+
+
+@pytest.mark.parametrize("kill_after", [1, 2])
+def test_sweep_ga_killed_at_barrier_resumes_bit_identical(
+    problems, ga_sweep_ref, tmp_path, kill_after
+):
+    with pytest.raises(SimulatedCrash):
+        pack_sweep(problems, "ga-nfd", seed=7, checkpoint_dir=tmp_path,
+                   checkpoint_every=4, on_checkpoint=crash_at(kill_after),
+                   **_GA)
+    resumed = pack_sweep(problems, "ga-nfd", seed=7, checkpoint_dir=tmp_path,
+                         checkpoint_every=4, resume=True, **_GA)
+    assert _sweep_record(resumed) == ga_sweep_ref
+
+
+def test_sweep_serial_lane_resumes_per_candidate(problems, tmp_path):
+    # sa-nfd has no batched lane: checkpoints are whole completed candidates
+    kw = dict(_KW, backend="python", max_iterations=250)
+    ref = _sweep_record(pack_sweep(problems, "sa-nfd", seed=2, **kw))
+    with pytest.raises(SimulatedCrash):
+        pack_sweep(problems, "sa-nfd", seed=2, checkpoint_dir=tmp_path,
+                   on_checkpoint=crash_at(2), **kw)
+    resumed = pack_sweep(problems, "sa-nfd", seed=2, checkpoint_dir=tmp_path,
+                         resume=True, **kw)
+    assert _sweep_record(resumed) == ref
+    assert resumed.n_solved == 1  # two of three came from the snapshot
+    assert resumed.cache_hits == 2
+
+
+def test_sweep_completed_checkpoint_serves_everything(problems, sweep_ref, tmp_path):
+    pack_sweep(problems, "sa-s", seed=3, checkpoint_dir=tmp_path,
+               checkpoint_every=150, **_SA)
+    again = pack_sweep(problems, "sa-s", seed=3, checkpoint_dir=tmp_path,
+                       checkpoint_every=150, resume=True, **_SA)
+    assert again.n_solved == 0
+    assert _sweep_record(again) == sweep_ref
+
+
+def test_sweep_resume_refuses_mismatched_config(problems, tmp_path):
+    with pytest.raises(SimulatedCrash):
+        pack_sweep(problems, "sa-s", seed=3, checkpoint_dir=tmp_path,
+                   checkpoint_every=150, on_checkpoint=crash_at(1), **_SA)
+    with pytest.raises(ValueError, match="differently-configured"):
+        pack_sweep(problems, "sa-s", seed=4, checkpoint_dir=tmp_path,
+                   checkpoint_every=150, resume=True, **_SA)
+
+
+def test_sweep_hetero_crash_resume(tmp_path):
+    # heterogeneous OCM: kind lanes + inventory arrays ride the same codecs
+    probs = [_problem(s, hetero=True) for s in (21, 22)]
+    kw = dict(_KW, backend="python", max_iterations=400, n_chains=4)
+    ref = _sweep_record(pack_sweep(probs, "sa-s", seed=5, **kw))
+    with pytest.raises(SimulatedCrash):
+        pack_sweep(probs, "sa-s", seed=5, checkpoint_dir=tmp_path,
+                   checkpoint_every=120, on_checkpoint=crash_at(2), **kw)
+    resumed = pack_sweep(probs, "sa-s", seed=5, checkpoint_dir=tmp_path,
+                         checkpoint_every=120, resume=True, **kw)
+    assert _sweep_record(resumed) == ref
+
+
+# -------------------------------------------------------------- pack_portfolio
+def test_portfolio_checkpointing_is_trajectory_neutral(
+    problems, portfolio_ref, tmp_path
+):
+    got = pack_portfolio(problems[0], islands=_ISLANDS,
+                         checkpoint_dir=tmp_path, checkpoint_every=2, **_PORT)
+    assert _portfolio_record(got) == portfolio_ref
+    assert got.params["truncated_by_wallclock"] is False
+
+
+@pytest.mark.parametrize("kill_after", [1, 2, 3])
+def test_portfolio_killed_at_barrier_resumes_bit_identical(
+    problems, portfolio_ref, tmp_path, kill_after
+):
+    with pytest.raises(SimulatedCrash):
+        pack_portfolio(problems[0], islands=_ISLANDS, checkpoint_dir=tmp_path,
+                       checkpoint_every=2, on_checkpoint=crash_at(kill_after),
+                       **_PORT)
+    resumed = pack_portfolio(problems[0], islands=_ISLANDS,
+                             checkpoint_dir=tmp_path, checkpoint_every=2,
+                             resume=True, **_PORT)
+    assert _portfolio_record(resumed) == portfolio_ref
+
+
+@pytest.mark.parametrize("damage", [tear_arrays, corrupt_manifest])
+def test_portfolio_resume_with_corrupted_latest_checkpoint(
+    problems, portfolio_ref, tmp_path, damage
+):
+    with pytest.raises(SimulatedCrash):
+        pack_portfolio(problems[0], islands=_ISLANDS, checkpoint_dir=tmp_path,
+                       checkpoint_every=2, on_checkpoint=crash_at(3), **_PORT)
+    damage(latest_step_dir(tmp_path))
+    resumed = pack_portfolio(problems[0], islands=_ISLANDS,
+                             checkpoint_dir=tmp_path, checkpoint_every=2,
+                             resume=True, **_PORT)
+    assert _portfolio_record(resumed) == portfolio_ref
+
+
+def test_portfolio_resume_refuses_mismatched_config(problems, tmp_path):
+    with pytest.raises(SimulatedCrash):
+        pack_portfolio(problems[0], islands=_ISLANDS, checkpoint_dir=tmp_path,
+                       checkpoint_every=1, on_checkpoint=crash_at(1), **_PORT)
+    other = [IslandSpec("ga-nfd", seed=99)] + _ISLANDS[1:]
+    with pytest.raises(ValueError, match="differently-configured"):
+        pack_portfolio(problems[0], islands=other, checkpoint_dir=tmp_path,
+                       checkpoint_every=1, resume=True, **_PORT)
+
+
+def test_single_island_portfolio_checkpoint_parity(problems, tmp_path):
+    # a single-island run normally advances unbounded in ONE call; with
+    # checkpointing it is segmented at synthetic barriers — trajectories
+    # must not notice (the PR-5 resumable-engine contract)
+    one = [IslandSpec("sa-s", seed=6)]
+    kw = dict(_PORT, migration_every=0)
+    ref = _portfolio_record(pack_portfolio(problems[0], islands=one, **kw))
+    got = _portfolio_record(
+        pack_portfolio(problems[0], islands=one, checkpoint_dir=tmp_path,
+                       checkpoint_every=1, **kw)
+    )
+    # barrier counters differ by construction (synthetic segmentation);
+    # cost/packing/iterations must not
+    assert got[:3] == ref[:3]
+
+
+# -------------------------------------------- wall-clock truncation surfacing
+def test_portfolio_truncation_is_recorded_and_warned(problems):
+    with pytest.warns(RuntimeWarning, match="wall-clock"):
+        res = pack_portfolio(
+            problems[0], n_islands=2, seed=1, migration_every=16,
+            max_seconds=0.0, max_iterations=10**9, backend="ref",
+        )
+    assert res.params["truncated_by_wallclock"] is True
+    assert res.params["barriers"] >= 1
+
+
+def test_portfolio_budget_terminated_run_is_not_marked_truncated(
+    problems, portfolio_ref
+):
+    # the reference fixture ran under iteration budgets with a huge wall cap
+    res = pack_portfolio(problems[0], islands=_ISLANDS, **_PORT)
+    assert res.params["truncated_by_wallclock"] is False
+    assert _portfolio_record(res) == portfolio_ref
