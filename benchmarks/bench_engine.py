@@ -309,9 +309,14 @@ def run_portfolio(accelerator=None, quick=False, smoke=False, seed=0,
     fixed per-step overhead K ways.  That scenario must clear >= 2x the
     thread pool's aggregate throughput on RN152-W1A2 at an equal-or-better
     final cost — while additionally being bit-reproducible (the thread
-    version's wall-clock rounds depend on machine speed).  The ``mixed``
-    scenario reports the default GA+SA+SA-NFD lineup for the same
-    comparison (its pace is bounded by the scalar engines on both sides).
+    version's wall-clock rounds depend on machine speed).
+
+    The lineup *matrix* covers every engine-family balance: ``mixed`` (the
+    default GA+SA+SA-NFD lineup), ``ga-heavy`` and ``scalar-heavy`` stress
+    the concurrent barrier scheduler — per-family barrier strides plus the
+    side-lane thread pool (docs/DESIGN.md section 13) must keep the fleet's
+    ``speedup_vs_threads`` >= 1.0 on every lineup (the ISSUE-7 acceptance
+    gate; ``tools/portfolio_gate.py`` enforces the mixed lineup in CI).
     """
     name = accelerator or ("CNV-W1A1" if smoke else "RN152-W1A2")
     budget = budget_s if budget_s is not None else (
@@ -328,6 +333,8 @@ def run_portfolio(accelerator=None, quick=False, smoke=False, seed=0,
     for scenario, algorithms in (
         ("sa-fleet", ("sa-s",)),
         ("mixed", ("ga-nfd", "sa-s", "sa-nfd")),
+        ("ga-heavy", ("ga-nfd", "ga-nfd", "ga-nfd", "sa-s")),
+        ("scalar-heavy", ("sa-nfd", "sa-nfd", "sa-nfd", "sa-s")),
     ):
         kw = dict(
             n_islands=n_islands, algorithms=algorithms, seed=seed,

@@ -48,7 +48,12 @@ from typing import Sequence
 
 import numpy as np
 
-from .ga import lockstep_generation, stacked_population_costs
+from .ga import (
+    lockstep_apply,
+    lockstep_begin,
+    lockstep_finish,
+    stacked_population_costs,
+)
 from .problem import (
     PackingProblem,
     PackingResult,
@@ -207,6 +212,22 @@ def _solve_sa_groups(
     return out
 
 
+def _lockstep_drain(pairs, gen_limit=None) -> bool:
+    """One lockstep generation through the GA segment API — identical to
+    ``ga.lockstep_generation`` (which wraps the same phases), written out so
+    the sweep lane exercises the begin/apply/finish contract the portfolio's
+    fused barrier dispatch builds on."""
+    advanced, batches = lockstep_begin(pairs, gen_limit)
+    for batch in batches:
+        lockstep_apply(
+            batch,
+            stacked_population_costs(
+                [r for _, r, _ in batch], batch[0][1].backend
+            ),
+        )
+    return lockstep_finish(advanced)
+
+
 def _solve_ga_groups(
     packer, groups, problems, seeds, backend, keys=None, ck=None
 ) -> dict[int, PackingResult]:
@@ -221,12 +242,14 @@ def _solve_ga_groups(
         totals = stacked_population_costs(runs, backend)
         for run, tot in zip(runs, totals):
             packer._eval_init(run, tot)
-        # the shared lockstep driver (ga.lockstep_generation) advances every
-        # live run one generation per call with one stacked fitness call —
-        # the same helper the fleet-native portfolio barriers on
+        # drive the GA segment API directly (ga.lockstep_begin / apply /
+        # finish): per generation, one mutation phase across every live run,
+        # one stacked fitness call per population-size batch, then
+        # selection — the same phases the fleet-native portfolio fuses with
+        # SA work at its barriers (docs/DESIGN.md section 13)
         pairs = [(packer, run) for run in runs]
         if ck is None:
-            while lockstep_generation(pairs):
+            while _lockstep_drain(pairs):
                 pass
         else:
             from .resume import encode_ga_group, group_digest
@@ -238,7 +261,7 @@ def _solve_ga_groups(
                 if not live:
                     break
                 glimit = (min(live) // ck.every + 1) * ck.every
-                while lockstep_generation(pairs, glimit):
+                while _lockstep_drain(pairs, glimit):
                     pass
                 if all(run.done for run in runs):
                     break

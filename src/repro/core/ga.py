@@ -645,15 +645,13 @@ class GeneticPacker:
         return self._finish_run(run)
 
 
-def stacked_population_costs(runs: Sequence["_GARun"], backend: str) -> np.ndarray:
-    """One leading-problem-axis fitness call over several GA runs.
+def stack_geometry(runs: Sequence["_GARun"]):
+    """Stack several runs' ``(n_pop, NB_j)`` geometry (and kind) matrices
+    into one zero-padded ``(A, n_pop, NB_max)`` block.
 
-    Stacks each run's ``(n_pop, NB_j)`` geometry (and kind) matrices into a
-    zero-padded ``(A, n_pop, NB_max)`` block — padded lanes have width 0 and
-    cost nothing, so totals equal the per-run 2-D calls exactly.  Shared by
-    ``core.dse``'s sweep driver (many problems, one packer) and
-    ``core.portfolio``'s island driver (one problem, many packers).
-    """
+    Padded lanes have width 0 and cost nothing, so leading-problem-axis
+    totals equal the per-run 2-D fitness calls exactly.  Returns
+    ``(W, H, Km)`` with ``Km is None`` on single-kind problems."""
     nb = max(r.W.shape[1] for r in runs)
     n_pop = runs[0].W.shape[0]
     W = np.zeros((len(runs), n_pop, nb), dtype=np.int32)
@@ -665,25 +663,38 @@ def stacked_population_costs(runs: Sequence["_GARun"], backend: str) -> np.ndarr
         H[a, :, : r.H.shape[1]] = r.H
         if hetero:
             Km[a, :, : r.Km.shape[1]] = r.Km
+    return W, H, Km
+
+
+def stacked_population_costs(runs: Sequence["_GARun"], backend: str) -> np.ndarray:
+    """One leading-problem-axis fitness call over several GA runs (see
+    :func:`stack_geometry` for the padding contract).  Shared by
+    ``core.dse``'s sweep driver (many problems, one packer) and
+    ``core.portfolio``'s island driver (one problem, many packers).
+    """
+    W, H, Km = stack_geometry(runs)
     return GeneticPacker._batched_costs(
         W, H, backend, Km, runs[0].kt, runs[0].modes0
     )
 
 
-def lockstep_generation(
+def lockstep_begin(
     pairs: Sequence[tuple[GeneticPacker, "_GARun"]],
     gen_limit: int | None = None,
-) -> bool:
-    """Advance ONE generation for every live (packer, run) pair in lockstep.
+) -> tuple[list, list]:
+    """Segment phase 1 of one lockstep generation: per-run bookkeeping
+    (budget/patience/wall checks) plus the mutation phase.
 
-    All batched pairs' mutated populations are evaluated in stacked
-    leading-problem-axis fitness calls (grouped by population size, via
-    :func:`stacked_population_costs`); each run consumes only its own RNG
-    stream, so every trajectory is bit-identical to the standalone
-    ``pack()`` loop.  ``gen_limit`` *pauses* runs that have reached a
-    portfolio barrier without marking them done; budget/patience/wall
-    exhaustion marks ``run.done``.  Returns True while any pair advanced.
-    """
+    Returns ``(advanced, batches)``: ``advanced`` is the live ``(packer,
+    run)`` pairs that entered this generation, ``batches`` the pending
+    fitness work as lists of ``(packer, run, mutated)`` entries grouped by
+    population size — each batch is one stacked leading-problem-axis
+    fitness call (see :func:`stack_geometry`).  Callers evaluate every
+    batch (directly via :func:`stacked_population_costs`, or fused with SA
+    fleet work through ``binpack_portfolio_step``), feed the totals to
+    :func:`lockstep_apply`, then close the generation with
+    :func:`lockstep_finish`.  ``gen_limit`` *pauses* runs that reached a
+    portfolio barrier without marking them done."""
     advanced: list[tuple[GeneticPacker, _GARun]] = []
     pending: list[tuple[GeneticPacker, _GARun, list[int]]] = []
     for packer, run in pairs:
@@ -703,20 +714,51 @@ def lockstep_generation(
         advanced.append((packer, run))
         if run.batched and mutated:
             pending.append((packer, run, mutated))
-    if pending:
-        groups: dict[int, list] = {}
-        for entry in pending:
-            groups.setdefault(entry[1].W.shape[0], []).append(entry)
-        for group in groups.values():
-            totals = stacked_population_costs(
-                [r for _, r, _ in group], group[0][1].backend
-            )
-            for (packer, run, mutated), tot in zip(group, totals):
-                packer._apply_costs(run, tot, mutated)
+    groups: dict[int, list] = {}
+    for entry in pending:
+        groups.setdefault(entry[1].W.shape[0], []).append(entry)
+    return advanced, list(groups.values())
+
+
+def lockstep_apply(batch: Sequence[tuple], totals) -> None:
+    """Segment phase 2: land one batch's stacked fitness totals (row ``a``
+    of ``totals`` belongs to ``batch[a]``'s run)."""
+    for (packer, run, mutated), tot in zip(batch, totals):
+        packer._apply_costs(run, tot, mutated)
+
+
+def lockstep_finish(advanced: Sequence[tuple]) -> bool:
+    """Segment phase 3: best tracking + tournament selection for every pair
+    that advanced; returns True while any pair advanced."""
     for packer, run in advanced:
         packer._track_best(run)
         packer._tournament(run)
     return bool(advanced)
+
+
+def lockstep_generation(
+    pairs: Sequence[tuple[GeneticPacker, "_GARun"]],
+    gen_limit: int | None = None,
+) -> bool:
+    """Advance ONE generation for every live (packer, run) pair in lockstep.
+
+    All batched pairs' mutated populations are evaluated in stacked
+    leading-problem-axis fitness calls (grouped by population size, via
+    :func:`stacked_population_costs`); each run consumes only its own RNG
+    stream, so every trajectory is bit-identical to the standalone
+    ``pack()`` loop.  ``gen_limit`` *pauses* runs that have reached a
+    portfolio barrier without marking them done; budget/patience/wall
+    exhaustion marks ``run.done``.  Returns True while any pair advanced.
+    (A thin driver over the segment phases :func:`lockstep_begin` /
+    :func:`lockstep_apply` / :func:`lockstep_finish`.)
+    """
+    advanced, batches = lockstep_begin(pairs, gen_limit)
+    for batch in batches:
+        totals = stacked_population_costs(
+            [r for _, r, _ in batch], batch[0][1].backend
+        )
+        lockstep_apply(batch, totals)
+    return lockstep_finish(advanced)
 
 
 class _GARun:

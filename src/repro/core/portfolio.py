@@ -34,7 +34,9 @@ reproducible** run-to-run and machine-independent (given iteration budgets;
 ``max_seconds`` remains as an outer safety cap only), and a single-island
 portfolio is bit-identical to the corresponding standalone ``pack()`` run —
 both pinned in ``tests/test_portfolio.py``.  Barrier semantics and the
-seed/stream layout: docs/DESIGN.md section 11.
+seed/stream layout: docs/DESIGN.md section 11; the concurrent scheduler,
+per-family strides, and fused dispatch: section 13 (parity pins in
+``tests/test_portfolio_concurrent.py``).
 """
 from __future__ import annotations
 
@@ -46,7 +48,15 @@ from typing import Sequence
 
 import numpy as np
 
-from .ga import GeneticPacker, lockstep_generation
+from .ga import (
+    GeneticPacker,
+    lockstep_apply,
+    lockstep_begin,
+    lockstep_finish,
+    lockstep_generation,
+    stack_geometry,
+    stacked_population_costs,
+)
 from .problem import (
     DEFAULT_INVENTORY_PENALTY,
     PackingProblem,
@@ -58,6 +68,25 @@ from .sa import SimulatedAnnealingPacker
 
 # default barrier spacing: SA iterations / GA generations between migrations
 DEFAULT_MIGRATION_EVERY = 64
+
+# Per-engine-family barrier strides on heterogeneous lineups (>1 engine
+# group): one barrier advances the delta-kernel SA engines (fleet and
+# single-chain sa-s) ``migration_every`` annealing steps — scaled up by the
+# number of GA islands in the lineup, see below — the scalar loops (sa-nfd's
+# sequential repack, the legacy backend) a quarter of that base, and the GA
+# lockstep pack 1/32 of it in generations.  The divisors are static
+# constants — strides depend only on the lineup and ``migration_every``,
+# never on machine speed — so trajectories stay bit-reproducible; they exist
+# because one GA generation (n_pop mutation repacks + a stacked fitness
+# call) costs on the order of `_GA_STRIDE_DIV` vectorized fleet steps *per
+# GA island*, and a uniform stride would park the whole barrier on the
+# slowest family (the ISSUE-7 "mixed lineup 0.24x threads" pathology).  The
+# GA-island multiplier lets the vectorized engines absorb the barrier slack
+# instead of idling while a stacked generation finishes.  Homogeneous
+# lineups (a single engine group) keep the uniform stride: nothing to
+# rebalance, and the fleet path stays exactly PR 5's.
+_SCALAR_STRIDE_DIV = 4
+_GA_STRIDE_DIV = 32
 
 # offset between per-round reseeds of the legacy thread-pool portfolio; any
 # large odd constant keeps island streams disjoint from the base seeds
@@ -276,6 +305,99 @@ def _sa_fleet_key(packer: SimulatedAnnealingPacker, resolved: str) -> tuple:
     )
 
 
+def _group_stride(group, interval: int, ga_islands: int) -> int:
+    """Barrier stride (iterations/generations per barrier) of one engine
+    group on a heterogeneous lineup — see `_GA_STRIDE_DIV` above.
+    ``ga_islands`` (the lineup's GA island count) scales the SA strides so
+    the delta-kernel engines keep annealing for roughly the wall time one
+    stacked GA generation takes, instead of idling at the barrier."""
+    if isinstance(group, _GAGroup):
+        return max(1, interval // _GA_STRIDE_DIV)
+    mult = max(1, ga_islands)
+    if isinstance(group, _ScalarIsland) and not group.single:
+        return max(1, interval // _SCALAR_STRIDE_DIV) * mult
+    # SA fleet + single-chain sa-s: the delta-kernel engines
+    return interval * mult
+
+
+def _group_label(group, i: int) -> str:
+    if isinstance(group, _SAFleetGroup):
+        return f"g{i}:fleet"
+    if isinstance(group, _GAGroup):
+        return f"g{i}:ga"
+    return f"g{i}:single" if group.single else f"g{i}:scalar"
+
+
+def _timed_advance(group, limit) -> tuple[bool, float]:
+    """Side-lane unit of work: advance one group to its barrier limit and
+    report (progressed, seconds).  Groups share no mutable state and each
+    island consumes only its own RNG stream, so running these on a thread
+    pool is bit-identical to the serial loop."""
+    t = time.perf_counter()
+    progressed = group.advance(limit)
+    return progressed, time.perf_counter() - t
+
+
+def _pump(gen, d_e):
+    """Feed one delta-cost answer into a `_block_gen` step generator."""
+    try:
+        return gen.send(d_e)
+    except StopIteration:
+        return None
+
+
+def _advance_fused(
+    fleet: "_SAFleetGroup", ga: "_GAGroup", fleet_limit, ga_limit
+) -> tuple[bool, bool]:
+    """Advance the SA fleet and the GA lockstep pack *together*, answering
+    one fleet step request and one stacked GA generation's fitness batch
+    through a single ``binpack_portfolio_step`` device program whenever
+    both have work (odd cycles — fleet drained, GA still running, or a
+    multi-population-size lineup — fall back to the separate kernels).
+
+    Bit-parity holds by construction: the fused kernel returns exactly the
+    totals/deltas the separate ``binpack_fitness`` / ``binpack_sa_step``
+    calls would (exact integer arithmetic, pinned in tests), and each
+    engine still consumes only its own RNG stream in its own order.
+    Returns (fleet_progressed, ga_progressed)."""
+    from repro.kernels.binpack_portfolio_step.ops import portfolio_step
+
+    packer, st = fleet.packer, fleet.st
+    before = st.it
+    gen = None if st.done else packer._block_gen(st, fleet_limit)
+    req = next(gen, None) if gen is not None else None
+    ga_progressed = False
+    while True:
+        advanced, batches = lockstep_begin(ga.pairs, ga_limit)
+        if req is None and not advanced:
+            break
+        if req is not None and len(batches) == 1:
+            batch = batches[0]
+            W, H, Km = stack_geometry([r for _, r, _ in batch])
+            old_w, old_h, new_w, new_h, old_k, new_k = req
+            totals, d_e = portfolio_step(
+                W, H, old_w, old_h, new_w, new_h,
+                modes=st.modes0, backend=st.backend, interpret=st.interpret,
+                kinds=Km, old_k=old_k, new_k=new_k,
+                kind_tables=st.kt if old_k is not None else None,
+            )
+            lockstep_apply(batch, totals)
+            batches = []
+            req = _pump(gen, d_e)
+        elif req is not None:
+            req = _pump(gen, packer._block_eval(st, req))
+        for batch in batches:
+            lockstep_apply(
+                batch,
+                stacked_population_costs(
+                    [r for _, r, _ in batch], batch[0][1].backend
+                ),
+            )
+        if lockstep_finish(advanced):
+            ga_progressed = True
+    return st.it > before, ga_progressed
+
+
 def pack_portfolio(
     prob: PackingProblem,
     islands: Sequence[IslandSpec] | None = None,
@@ -288,6 +410,8 @@ def pack_portfolio(
     backend: str = "auto",
     max_workers: int | None = None,
     sa_chains: int = 8,
+    scheduler: str = "concurrent",
+    fused: bool | None = None,
     checkpoint_dir: str | None = None,
     checkpoint_every: int = 1,
     resume: bool = False,
@@ -302,14 +426,36 @@ def pack_portfolio(
     to every island (per-island ``IslandSpec.hyper`` overrides win).
 
     ``migration_every`` is an **iteration/generation count** (default 64,
-    `DEFAULT_MIGRATION_EVERY`): each barrier advances SA islands that many
-    annealing steps and GA islands that many generations, then broadcasts
-    the global best into every other live island's worst warm slot.  Pass
-    ``migration_every=0`` to disable migration (islands run independently
-    to their budgets).  ``max_seconds`` is an outer safety cap only — for
-    bit-reproducible, machine-independent runs give the islands iteration
-    budgets (``max_iterations`` / ``max_generations``) and a large
-    ``max_seconds``, exactly as with :func:`repro.core.api.pack_sweep`.
+    `DEFAULT_MIGRATION_EVERY`): each barrier advances the delta-kernel SA
+    islands that many annealing steps, then broadcasts the global best into
+    every other live island's worst warm slot.  On heterogeneous lineups
+    each engine family advances at its own per-family stride (GA islands
+    ``migration_every // 32`` generations and scalar loops
+    ``migration_every // 4`` iterations per barrier, min 1; the
+    delta-kernel SA strides scale with the lineup's GA island count — see
+    `_group_stride`): strides are static functions of the lineup only, so
+    trajectories stay machine-independent, and no family's segment can
+    park the barrier (docs/DESIGN.md section 13).  Pass ``migration_every=0`` to disable
+    migration (islands run independently to their budgets).
+    ``max_seconds`` is an outer safety cap only — for bit-reproducible,
+    machine-independent runs give the islands iteration budgets
+    (``max_iterations`` / ``max_generations``) and a large ``max_seconds``,
+    exactly as with :func:`repro.core.api.pack_sweep`.
+
+    ``scheduler`` picks how groups advance *between* barriers:
+    ``"concurrent"`` (default) runs the device-dispatch lane (the SA fleet,
+    fused with the GA pack when ``fused`` engages) on the calling thread
+    and every other engine group on a `ThreadPoolExecutor` side lane;
+    ``"serial"`` is the PR-5 reference loop.  Both schedules are
+    **bit-identical** — groups share no mutable state and each island
+    consumes only its own RNG stream, so concurrency changes wall-clock,
+    never results (pinned in ``tests/test_portfolio_concurrent.py``).
+    ``fused=None`` (auto) routes each barrier's SA fleet step requests and
+    stacked GA fitness batch through one combined
+    ``binpack_portfolio_step`` device program when both engines resolved to
+    a jax backend ("ref"/"pallas"); ``True``/``False`` force it.  On a CPU
+    host SA auto-resolves to host numpy, so auto keeps fused dispatch off
+    there.
 
     A "sa-s" island runs the batched multi-chain annealer with ``sa_chains``
     temperature-laddered chains; all such islands advance as ONE
@@ -345,6 +491,14 @@ def pack_portfolio(
     ``RuntimeWarning`` is emitted (``params["barriers"]`` records how many
     migration barriers completed) — a truncated portfolio is NOT
     bit-reproducible across machines.
+
+    Wall-clock attribution lands in the result's params:
+    ``params["barrier_seconds"]`` is the per-barrier wall time and
+    ``params["group_seconds"]`` maps each engine group (``"g0:ga"``,
+    ``"g1:fleet"``, ``"g2:scalar"``, ...; a fused pair reports as
+    ``"g0+g1:fused"``) to its cumulative advance seconds, so the bench can
+    see where a lineup's time goes.  Timing keys are diagnostics only and
+    exempt from the bit-reproducibility contract.
     """
     from .api import make_packer  # late import: api imports nothing from here
 
@@ -457,6 +611,10 @@ def pack_portfolio(
             adapters[k] = _FleetIsland(fleet, j)
 
     # --- barriered fleet loop: advance everything, then migrate
+    if scheduler not in ("concurrent", "serial"):
+        raise ValueError(
+            f"unknown scheduler {scheduler!r}; options: concurrent, serial"
+        )
     barrier = 0
     migrations = 0
     truncated = False
@@ -472,26 +630,111 @@ def pack_portfolio(
     seg = interval if interval > 0 else (
         DEFAULT_MIGRATION_EVERY if ck is not None else 0
     )
-    while any(not isl.done() for isl in adapters):
-        if barrier > 0 and time.perf_counter() - t0 > max_seconds:
-            truncated = True
-            break
-        barrier += 1
-        limit = None if ((single and ck is None) or seg <= 0) else barrier * seg
-        progressed = [g.advance(limit) for g in groups]
-        if not single and interval > 0:
-            # deterministic migration: strict-min global best (first island
-            # wins ties) lands in every OTHER live island's worst warm slot
-            vals = [c + lam * o for c, o in (isl.raw() for isl in adapters)]
-            src = min(range(len(vals)), key=vals.__getitem__)
-            migrant = adapters[src].best_solution()
-            for k, isl in enumerate(adapters):
-                if k != src:
-                    migrations += isl.migrate_in(migrant)
-        if ck is not None and barrier % ck.every == 0:
-            ck.save_groups(groups, barrier, migrations)
-        if not any(progressed):
-            break  # no island can move: budgets exhausted mid-barrier
+    # per-family strides rebalance heterogeneous lineups (see the module
+    # constants); homogeneous lineups and snapshot-only segmentation keep
+    # the uniform stride.  Strides are deterministic functions of the
+    # lineup and ``migration_every``, so they are part of the trajectory
+    # contract; ``scheduler``/``fused`` are not (dispatch only).
+    multi = len(groups) > 1
+    n_ga_islands = len(ga_pairs)
+    strides = [
+        _group_stride(g, seg, n_ga_islands) if (multi and interval > 0)
+        else seg
+        for g in groups
+    ]
+    labels = [_group_label(g, i) for i, g in enumerate(groups)]
+    # the fused pair: the (only) SA fleet group + the GA lockstep pack,
+    # merged into one main-thread dispatch unit when both engines resolved
+    # to a jax backend (forced either way via ``fused``)
+    fi = next(
+        (i for i, g in enumerate(groups) if isinstance(g, _SAFleetGroup)), None
+    )
+    gi = next(
+        (i for i, g in enumerate(groups) if isinstance(g, _GAGroup)), None
+    )
+    fuse = (
+        scheduler == "concurrent" and fi is not None and gi is not None
+        and sum(isinstance(g, _SAFleetGroup) for g in groups) == 1
+        and (
+            fused if fused is not None
+            else (
+                groups[fi].st.backend in ("ref", "pallas")
+                and all(r.backend in ("ref", "pallas") and r.batched
+                        for _, r in groups[gi].pairs)
+            )
+        )
+    )
+    # main-thread lane: the fused pair, else the SA fleet (device dispatch
+    # window), else the first group; everything else rides the side lane
+    main_idx = {fi, gi} if fuse else {fi if fi is not None else 0}
+    side_idx = [i for i in range(len(groups)) if i not in main_idx]
+    pool = (
+        ThreadPoolExecutor(max_workers=len(side_idx))
+        if scheduler == "concurrent" and side_idx
+        else None
+    )
+    group_seconds: dict[str, float] = {lab: 0.0 for lab in labels}
+    if fuse:
+        fused_label = f"g{min(fi, gi)}+g{max(fi, gi)}:fused"
+        group_seconds[fused_label] = 0.0
+        for i in sorted(main_idx):
+            group_seconds.pop(labels[i])
+    barrier_seconds: list[float] = []
+    try:
+        while any(not isl.done() for isl in adapters):
+            if barrier > 0 and time.perf_counter() - t0 > max_seconds:
+                truncated = True
+                break
+            barrier += 1
+            t_bar = time.perf_counter()
+            unbounded = (single and ck is None) or seg <= 0
+            limits = [
+                None if unbounded else barrier * s for s in strides
+            ]
+            progressed = [False] * len(groups)
+            if pool is not None:
+                futures = {
+                    i: pool.submit(_timed_advance, groups[i], limits[i])
+                    for i in side_idx
+                }
+            else:
+                futures = {}
+            t_main = time.perf_counter()
+            if fuse:
+                progressed[fi], progressed[gi] = _advance_fused(
+                    groups[fi], groups[gi], limits[fi], limits[gi]
+                )
+                group_seconds[fused_label] += time.perf_counter() - t_main
+            else:
+                mains = sorted(main_idx) if pool is not None else [
+                    i for i in range(len(groups)) if i not in futures
+                ]
+                for i in mains:
+                    progressed[i], dt = _timed_advance(groups[i], limits[i])
+                    group_seconds[labels[i]] += dt
+            for i, fut in futures.items():
+                progressed[i], dt = fut.result()
+                group_seconds[labels[i]] += dt
+            if not single and interval > 0:
+                # deterministic migration: strict-min global best (first
+                # island wins ties) lands in every OTHER live island's
+                # worst warm slot
+                vals = [
+                    c + lam * o for c, o in (isl.raw() for isl in adapters)
+                ]
+                src = min(range(len(vals)), key=vals.__getitem__)
+                migrant = adapters[src].best_solution()
+                for k, isl in enumerate(adapters):
+                    if k != src:
+                        migrations += isl.migrate_in(migrant)
+            if ck is not None and barrier % ck.every == 0:
+                ck.save_groups(groups, barrier, migrations)
+            barrier_seconds.append(time.perf_counter() - t_bar)
+            if not any(progressed):
+                break  # no island can move: budgets exhausted mid-barrier
+    finally:
+        if pool is not None:
+            pool.shutdown()
 
     # --- assemble the portfolio result (strict-min, first island wins ties)
     wall = time.perf_counter() - t0
@@ -534,6 +777,11 @@ def pack_portfolio(
             truncated_by_wallclock=truncated,
             backend=backend,
             seed=seed,
+            scheduler=scheduler,
+            fused=bool(fuse),
+            strides=dict(zip(labels, strides)),
+            barrier_seconds=barrier_seconds,
+            group_seconds=group_seconds,
         ),
     )
 
@@ -596,6 +844,13 @@ def pack_portfolio_threads(
     wall-clock budgeted, so results vary with machine speed and load —
     exactly the nondeterminism the fleet-native :func:`pack_portfolio`
     replaced (``benchmarks/run.py --only portfolio`` compares the two).
+
+    **Baseline only.**  This engine is kept solely as the comparison point
+    for the bench lineup matrix and ``tools/portfolio_gate.py``; it is
+    outside the determinism, checkpoint/resume, and scheduler contracts
+    and intentionally grows no ``scheduler``/``fused``/``checkpoint_dir``
+    surface (pinned by ``tests/test_portfolio_concurrent.py``).  Use
+    :func:`pack_portfolio` for real runs.
     """
     from .api import make_packer  # late import: api imports nothing from here
 

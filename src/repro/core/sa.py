@@ -780,12 +780,68 @@ class SimulatedAnnealingPacker:
         st.frozen = False
         return st
 
+    def _block_eval(self, st: _BlockState, req: tuple) -> np.ndarray:
+        """Answer one `_block_gen` step request with a direct kernel call
+        (the non-fused dispatch path; ``core.portfolio``'s fused driver
+        answers the same requests through ``binpack_portfolio_step``)."""
+        from repro.kernels.binpack_sa_step.ops import sa_step_deltas
+
+        old_w, old_h, new_w, new_h, old_k, new_k = req
+        if old_k is not None:
+            return sa_step_deltas(
+                old_w, old_h, new_w, new_h, backend=st.backend,
+                interpret=st.interpret, old_k=old_k, new_k=new_k,
+                kind_tables=st.kt,
+            )
+        return sa_step_deltas(
+            old_w, old_h, new_w, new_h, modes=st.modes0,
+            backend=st.backend, interpret=st.interpret,
+        )
+
     def _block_run(self, st: _BlockState, it_limit: int | None = None) -> None:
         """Advance the fleet until ``it_limit`` (a portfolio barrier), the
-        iteration budget, the wall cap, or fleet-wide freezing.  All state
-        lives in ``st``, so a barriered run is bit-identical to an
-        uninterrupted one."""
-        from repro.kernels.binpack_sa_step.ops import metropolis_mask, sa_step_deltas
+        iteration budget, the wall cap, or fleet-wide freezing — by driving
+        `_block_gen` and answering every step request with the fused
+        delta-cost kernel directly.  All state lives in ``st``, so a
+        barriered run is bit-identical to an uninterrupted one."""
+        from repro.kernels.binpack_sa_step.ops import sa_step_deltas
+
+        hetero = st.hetero
+        gen = self._block_gen(st, it_limit)
+        req = next(gen, None)
+        while req is not None:
+            old_w, old_h, new_w, new_h, old_k, new_k = req
+            if hetero:
+                d_e = sa_step_deltas(
+                    old_w, old_h, new_w, new_h, backend=st.backend,
+                    interpret=st.interpret, old_k=old_k, new_k=new_k,
+                    kind_tables=st.kt,
+                )
+            else:
+                d_e = sa_step_deltas(
+                    old_w, old_h, new_w, new_h, modes=st.modes0,
+                    backend=st.backend, interpret=st.interpret,
+                )
+            try:
+                req = gen.send(d_e)
+            except StopIteration:
+                break
+
+    def _block_gen(self, st: _BlockState, it_limit: int | None = None):
+        """The fleet hot loop as a *step-request generator*.
+
+        Yields one ``(old_w, old_h, new_w, new_h, old_k, new_k)`` touched-
+        bin geometry request per annealing step (kind lanes are ``None`` on
+        single-kind problems) and expects the ``(R,)`` int64 delta-cost
+        vector back via ``send()`` — i.e. exactly the inputs and output of
+        ``binpack_sa_step.ops.sa_step_deltas``.  Everything else (proposal,
+        Metropolis, rollback/commit, best tracking, exchange) happens
+        inside, so every consumer — `_block_run`'s direct kernel driver or
+        the portfolio's fused GA+SA dispatcher — advances the *same* loop
+        body and produces bit-identical trajectories.  Consumers must drain
+        the generator to ``StopIteration`` so the rebound loop state is
+        written back to ``st``."""
+        from repro.kernels.binpack_sa_step.ops import metropolis_mask
 
         limit = (
             self.max_iterations if it_limit is None
@@ -793,9 +849,8 @@ class SimulatedAnnealingPacker:
         )
         n_probs, n_chains, n_rows = st.n_probs, self.n_chains, st.n_rows
         n_moves, width = st.n_moves, 2 * st.n_moves
-        backend, interpret = st.backend, st.interpret
         batch, probs, rngs = st.batch, st.probs, st.rngs
-        hetero, kt, modes0 = st.hetero, st.kt, st.modes0
+        hetero = st.hetero
         lam = self.inventory_penalty
         pk = self.p_kind if hetero else 0.0
         n_kinds, any_bounded = st.n_kinds, st.any_bounded
@@ -953,10 +1008,7 @@ class SimulatedAnnealingPacker:
             if hetero:
                 old_k = np.where(entry_ok, bk[rows, sel], 0).astype(np.int32)
                 new_k = np.where(entry_ok, bk_new[rows, sel], 0).astype(np.int32)
-                d_e = sa_step_deltas(
-                    old_w, old_h, new_w, new_h, backend=backend,
-                    interpret=interpret, old_k=old_k, new_k=new_k, kind_tables=kt,
-                )
+                d_e = yield (old_w, old_h, new_w, new_h, old_k, new_k)
                 if any_bounded:
                     # inventory-penalty delta, vectorized over all rows: the
                     # per-kind primitive usage change of the touched slots
@@ -974,10 +1026,7 @@ class SimulatedAnnealingPacker:
                     dUK = None  # unbounded inventory never overflows
                     d_tot = d_e
             else:
-                d_e = sa_step_deltas(
-                    old_w, old_h, new_w, new_h, modes=modes0,
-                    backend=backend, interpret=interpret,
-                )
+                d_e = yield (old_w, old_h, new_w, new_h, None, None)
                 d_tot = d_e
             # --- Metropolis acceptance: per-problem draws, one batched rule
             temps = t0s / (1.0 + self.rc * it)

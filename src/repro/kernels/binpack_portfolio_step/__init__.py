@@ -1,0 +1,8 @@
+"""Fused portfolio step kernel: GA generation fitness + SA fleet deltas.
+
+`ops.portfolio_step` evaluates one stacked GA population-fitness block
+(``binpack_fitness``) and one SA fleet delta-cost step
+(``binpack_sa_step``) in a single combined call — the device program behind
+``core.portfolio``'s fused barrier dispatch (docs/DESIGN.md section 13).
+"""
+from .ops import portfolio_step  # noqa: F401

@@ -1,0 +1,64 @@
+"""Pure-jnp oracle for the fused portfolio step.
+
+One traced function computes the GA side (per-individual population totals)
+and the SA side (per-chain delta costs) together, so a jit of either wrapper
+in ``ops.py`` compiles ONE combined XLA program per barrier segment instead
+of two separate dispatches.  Both halves reuse the exact-integer cost
+primitives of ``binpack_fitness`` / ``binpack_sa_step``, so results are
+bit-identical to the separate calls.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.binpack_fitness.ref import (
+    binpack_fitness_kinds_ref,
+    binpack_fitness_ref,
+)
+from repro.kernels.binpack_sa_step.ref import (
+    sa_step_deltas_kinds_ref,
+    sa_step_deltas_ref,
+)
+
+
+def portfolio_step_ref(
+    W: jax.Array,  # (..., NB) int32 — stacked GA population geometry
+    H: jax.Array,
+    old_w: jax.Array,  # (R, T) int32 — SA touched-bin geometry before
+    old_h: jax.Array,
+    new_w: jax.Array,  # (R, T) int32 — SA touched-bin geometry after
+    new_h: jax.Array,
+    modes: tuple[tuple[int, int], ...],
+) -> tuple[jax.Array, jax.Array]:
+    """-> ((...,) population totals, (R,) SA delta costs), both exact ints."""
+    nb = W.shape[-1]
+    per_bin = binpack_fitness_ref(W.reshape(-1, nb), H.reshape(-1, nb), modes)
+    totals = jnp.sum(per_bin, axis=1).reshape(W.shape[:-1])
+    deltas = sa_step_deltas_ref(old_w, old_h, new_w, new_h, modes)
+    return totals, deltas
+
+
+def portfolio_step_kinds_ref(
+    W: jax.Array,
+    H: jax.Array,
+    Km: jax.Array,  # (..., NB) int32 RAM-kind lanes of the GA populations
+    old_w: jax.Array,
+    old_h: jax.Array,
+    old_k: jax.Array,  # (R, T) int32 RAM-kind lanes before the SA move
+    new_w: jax.Array,
+    new_h: jax.Array,
+    new_k: jax.Array,  # (R, T) int32 RAM-kind lanes after the SA move
+    kind_tables: tuple[tuple[int, tuple[tuple[int, int], ...]], ...],
+) -> tuple[jax.Array, jax.Array]:
+    """Heterogeneous variant: per-bin kind lanes select per-kind mode
+    tables/weights on both the GA and the SA side."""
+    nb = W.shape[-1]
+    per_bin = binpack_fitness_kinds_ref(
+        W.reshape(-1, nb), H.reshape(-1, nb), Km.reshape(-1, nb), kind_tables
+    )
+    totals = jnp.sum(per_bin, axis=1).reshape(W.shape[:-1])
+    deltas = sa_step_deltas_kinds_ref(
+        old_w, old_h, old_k, new_w, new_h, new_k, kind_tables
+    )
+    return totals, deltas

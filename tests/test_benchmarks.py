@@ -58,8 +58,10 @@ def test_bench_portfolio_smoke():
     from benchmarks import bench_engine
 
     rows = bench_engine.run_portfolio(smoke=True, budget_s=0.5)
-    assert [r[2] for r in rows] == ["threads", "fleet", "threads", "fleet"]
-    assert {r[1] for r in rows} == {"sa-fleet", "mixed"}
+    assert [r[2] for r in rows] == ["threads", "fleet"] * 4
+    assert [r[1] for r in rows[::2]] == [
+        "sa-fleet", "mixed", "ga-heavy", "scalar-heavy"
+    ]
 
 
 @pytest.mark.slow

@@ -228,3 +228,77 @@ def test_problem_axis_matches_per_problem_slices(backend, rng):
         for i in range(npb)
     ])
     np.testing.assert_array_equal(dk3, perk)
+
+
+# ------------------------------------------------------ fused portfolio step
+@pytest.mark.parametrize("backend", ["python", "ref", "pallas"])
+def test_portfolio_step_matches_separate_dispatches(backend, rng):
+    """The fused GA-fitness + SA-delta program is bit-identical to the two
+    separate kernel dispatches it replaces, on every backend (the
+    core.portfolio fused-barrier contract)."""
+    from repro.kernels.binpack_portfolio_step.ops import portfolio_step
+
+    a, p, nb, cc, t = 2, 5, 23, 7, 4
+    w = rng.integers(0, 80, (a, p, nb)).astype(np.int32)
+    w[rng.random((a, p, nb)) < 0.3] = 0
+    h = np.where(w > 0, rng.integers(1, 60_000, (a, p, nb)), 0).astype(np.int32)
+    ow = rng.integers(0, 80, (cc, t)).astype(np.int32)
+    oh = np.where(ow > 0, rng.integers(1, 60_000, (cc, t)), 0).astype(np.int32)
+    nw = rng.integers(0, 80, (cc, t)).astype(np.int32)
+    nh = np.where(nw > 0, rng.integers(1, 60_000, (cc, t)), 0).astype(np.int32)
+    totals, deltas = portfolio_step(w, h, ow, oh, nw, nh, backend=backend)
+    assert totals.shape == (a, p) and totals.dtype == np.float64
+    assert deltas.shape == (cc,) and deltas.dtype == np.int64
+    np.testing.assert_array_equal(
+        totals,
+        np.asarray(population_costs(jnp.asarray(w), jnp.asarray(h),
+                                    backend="ref")),
+    )
+    np.testing.assert_array_equal(
+        deltas, sa_step_deltas(ow, oh, nw, nh, backend="python")
+    )
+
+
+@pytest.mark.parametrize("backend", ["python", "ref", "pallas"])
+def test_portfolio_step_kinds_matches_separate_dispatches(backend, rng):
+    from repro.core.problem import BRAM18, URAM288
+    from repro.kernels.binpack_portfolio_step.ops import portfolio_step
+
+    kt = ((1, BRAM18.modes), (16, URAM288.modes))
+    a, p, nb, cc, t = 2, 4, 19, 6, 3
+    w = rng.integers(0, 80, (a, p, nb)).astype(np.int32)
+    w[rng.random((a, p, nb)) < 0.3] = 0
+    h = np.where(w > 0, rng.integers(1, 60_000, (a, p, nb)), 0).astype(np.int32)
+    km = rng.integers(0, 2, (a, p, nb)).astype(np.int32)
+    ow = rng.integers(0, 80, (cc, t)).astype(np.int32)
+    oh = np.where(ow > 0, rng.integers(1, 60_000, (cc, t)), 0).astype(np.int32)
+    ok = rng.integers(0, 2, (cc, t)).astype(np.int32)
+    nw = rng.integers(0, 80, (cc, t)).astype(np.int32)
+    nh = np.where(nw > 0, rng.integers(1, 60_000, (cc, t)), 0).astype(np.int32)
+    nk = rng.integers(0, 2, (cc, t)).astype(np.int32)
+    totals, deltas = portfolio_step(
+        w, h, ow, oh, nw, nh, backend=backend, kinds=km,
+        old_k=ok, new_k=nk, kind_tables=kt,
+    )
+    np.testing.assert_array_equal(
+        totals,
+        np.asarray(population_costs(
+            jnp.asarray(w), jnp.asarray(h), backend="ref",
+            kinds=jnp.asarray(km), kind_tables=kt,
+        )),
+    )
+    np.testing.assert_array_equal(
+        deltas,
+        sa_step_deltas(ow, oh, nw, nh, backend="python",
+                       old_k=ok, new_k=nk, kind_tables=kt),
+    )
+
+
+def test_portfolio_step_rejects_partial_kind_lanes(rng):
+    """kinds/old_k/new_k/kind_tables are all-or-none: a portfolio's islands
+    share one problem, so half-hetero inputs are a caller bug."""
+    from repro.kernels.binpack_portfolio_step.ops import portfolio_step
+
+    z = np.zeros((2, 3), dtype=np.int32)
+    with pytest.raises(ValueError, match="together"):
+        portfolio_step(z, z, z, z, z, z, backend="python", old_k=z)

@@ -1,0 +1,216 @@
+"""Concurrent heterogeneous barrier execution: bit-parity with the serial
+loop (ISSUE 7 acceptance pins).
+
+The scheduler contract: ``scheduler="concurrent"`` (side-lane threads for
+the scalar/GA groups, device-dispatch main lane for the SA fleet, optional
+fused fleet+GA dispatch) changes WALL-CLOCK ONLY.  Every island still
+consumes exactly its own RNG stream against disjoint state, so the final
+cost, packing, improvement-trace cost sequence, migration decisions, and
+iteration counts are bit-identical to ``scheduler="serial"`` (the PR-5
+reference loop) — for every lineup in the bench matrix, on hetero-OCM
+problems, with forced fused dispatch, and across a checkpoint/resume cut
+mid-run.  Wall-clock values (``barrier_seconds``/``group_seconds``, the
+wall-time-ordered merged trace *times*) are exempt.
+"""
+import numpy as np
+import pytest
+
+from faultinject import SimulatedCrash, crash_at
+from repro.core import IslandSpec, pack_portfolio
+from repro.core.portfolio import pack_portfolio_threads
+from repro.core.problem import (
+    BRAM18,
+    URAM288,
+    Buffer,
+    OCMInventory,
+    PackingProblem,
+)
+
+# iteration-budgeted: machine speed never enters, runs are bit-reproducible
+_KW = dict(
+    max_seconds=1e9, patience=10**9, backend="python", sa_chains=4,
+    migration_every=32, max_iterations=400, max_generations=8,
+)
+
+# the bench lineup matrix (benchmarks/bench_engine.py run_portfolio)
+_LINEUPS = {
+    "sa-fleet": ("sa-s",),
+    "mixed": ("ga-nfd", "sa-s", "sa-nfd"),
+    "ga-heavy": ("ga-nfd", "ga-nfd", "ga-nfd", "sa-s"),
+    "scalar-heavy": ("sa-nfd", "sa-nfd", "sa-nfd", "sa-s"),
+}
+
+
+def _problem(seed: int, hetero: bool = False) -> PackingProblem:
+    rng = np.random.default_rng(seed)
+    bufs = [
+        Buffer(width=int(rng.integers(1, 80)),
+               depth=int(rng.integers(1, 40_000)),
+               layer=int(rng.integers(0, 5)))
+        for _ in range(int(rng.integers(14, 28)))
+    ]
+    ocm = (
+        OCMInventory((BRAM18, URAM288), (len(bufs) * 3, 8), name=f"dev{seed}")
+        if hetero else None
+    )
+    return PackingProblem(bufs, max_items=4, name=f"cp{seed}", ocm=ocm)
+
+
+def _record(res):
+    """Everything the parity contract covers, nothing wall-clock."""
+    return (
+        res.cost, res.solution.state_dict(), res.iterations,
+        [c for _, c in res.trace], res.params["barriers"],
+        res.params["migrations"], res.params["strides"],
+    )
+
+
+def _run(prob, lineup, **kw):
+    merged = {**_KW, "n_islands": len(lineup) + 1, "algorithms": lineup, **kw}
+    return pack_portfolio(prob, **merged)
+
+
+# ------------------------------------------------------- scheduler bit-parity
+@pytest.mark.parametrize("name", sorted(_LINEUPS))
+def test_concurrent_matches_serial(name):
+    """The acceptance pin: concurrent == serial, bit for bit, for every
+    lineup in the bench matrix."""
+    prob = _problem(21)
+    lineup = _LINEUPS[name]
+    a = _run(prob, lineup, scheduler="serial")
+    b = _run(prob, lineup, scheduler="concurrent")
+    assert _record(a) == _record(b)
+    assert a.params["scheduler"] == "serial"
+    assert b.params["scheduler"] == "concurrent"
+
+
+def test_concurrent_matches_serial_hetero_ocm():
+    """Same pin on a heterogeneous-OCM problem: kind lanes and the
+    inventory-penalized migration comparisons ride the side lane too."""
+    prob = _problem(22, hetero=True)
+    a = _run(prob, _LINEUPS["mixed"], scheduler="serial")
+    b = _run(prob, _LINEUPS["mixed"], scheduler="concurrent")
+    assert _record(a) == _record(b)
+
+
+def test_concurrent_is_reproducible_run_to_run():
+    prob = _problem(23)
+    a = _run(prob, _LINEUPS["mixed"], scheduler="concurrent")
+    b = _run(prob, _LINEUPS["mixed"], scheduler="concurrent")
+    assert _record(a) == _record(b)
+
+
+# ------------------------------------------------------------- fused dispatch
+def test_fused_forced_matches_serial():
+    """Forcing fused dispatch on the numpy backend exercises the fused
+    fleet+GA driver without JAX: still bit-identical to the serial loop."""
+    prob = _problem(24)
+    a = _run(prob, _LINEUPS["mixed"], scheduler="serial")
+    b = _run(prob, _LINEUPS["mixed"], scheduler="concurrent", fused=True)
+    assert _record(a) == _record(b)
+    assert a.params["fused"] is False
+    assert b.params["fused"] is True
+    assert any(k.endswith(":fused") for k in b.params["group_seconds"])
+
+
+def test_fused_ref_backend_matches_serial():
+    """The jax path: ref-backend fused barriers (one jit'd device program
+    per segment) leave the trajectory untouched, hetero kinds included."""
+    prob = _problem(25, hetero=True)
+    kw = dict(backend="ref", migration_every=16, max_iterations=200,
+              max_generations=5, sa_chains=3)
+    a = _run(prob, _LINEUPS["mixed"], scheduler="serial", **kw)
+    b = _run(prob, _LINEUPS["mixed"], scheduler="concurrent", fused=True, **kw)
+    assert _record(a) == _record(b)
+    assert b.params["fused"] is True
+
+
+def test_fused_stays_off_on_python_backend():
+    """Auto-fuse requires both engines on a jax backend: the CPU default
+    (numpy SA) keeps the fused path off unless forced."""
+    prob = _problem(26)
+    r = _run(prob, _LINEUPS["mixed"], scheduler="concurrent")
+    assert r.params["fused"] is False
+
+
+# -------------------------------------------------- checkpoint/resume parity
+def _resume_record(res):
+    """The PR-6 resume contract: the merged trace is wall-time-ordered and
+    rebuilt from restored state, so (like test_resume.py) it is exempt."""
+    r = _record(res)
+    return r[:3] + r[4:]
+
+
+def test_checkpoint_resume_mid_barrier_concurrent(tmp_path):
+    """A concurrent run killed at a mid-run barrier resumes — still
+    concurrent — to the bit-identical result of an uninterrupted serial
+    run (scheduler/fused are dispatch-only: not part of the snapshot
+    identity, so they may even differ across the cut)."""
+    prob = _problem(27)
+    ref = _resume_record(_run(prob, _LINEUPS["mixed"], scheduler="serial"))
+    with pytest.raises(SimulatedCrash):
+        _run(prob, _LINEUPS["mixed"], scheduler="concurrent",
+             checkpoint_dir=tmp_path, checkpoint_every=2,
+             on_checkpoint=crash_at(2))
+    resumed = _run(prob, _LINEUPS["mixed"], scheduler="concurrent",
+                   checkpoint_dir=tmp_path, resume=True)
+    assert _resume_record(resumed) == ref
+
+
+def test_serial_resume_of_concurrent_checkpoint(tmp_path):
+    prob = _problem(28)
+    ref = _resume_record(
+        _run(prob, _LINEUPS["scalar-heavy"], scheduler="serial")
+    )
+    with pytest.raises(SimulatedCrash):
+        _run(prob, _LINEUPS["scalar-heavy"], scheduler="concurrent",
+             checkpoint_dir=tmp_path, checkpoint_every=2,
+             on_checkpoint=crash_at(1))
+    resumed = _run(prob, _LINEUPS["scalar-heavy"], scheduler="serial",
+                   checkpoint_dir=tmp_path, resume=True)
+    assert _resume_record(resumed) == ref
+
+
+# ------------------------------------------------------- strides and timing
+def test_strides_recorded_and_static():
+    """Per-family strides are a pure function of lineup + migration_every
+    (never machine speed): pinned literally for the mixed lineup."""
+    prob = _problem(29)
+    r = _run(prob, _LINEUPS["mixed"])
+    # 4 islands over (ga-nfd, sa-s, sa-nfd) -> 2 GA islands, so the
+    # delta-kernel fleet stride carries the x2 GA-island multiplier
+    assert r.params["strides"] == {"g0:scalar": 16, "g1:ga": 1, "g2:fleet": 64}
+
+
+def test_homogeneous_lineup_keeps_uniform_stride():
+    prob = _problem(30)
+    r = _run(prob, _LINEUPS["sa-fleet"])
+    assert r.params["strides"] == {"g0:fleet": 32}
+
+
+def test_timing_params_present():
+    prob = _problem(31)
+    r = _run(prob, _LINEUPS["mixed"], scheduler="concurrent")
+    assert len(r.params["barrier_seconds"]) == r.params["barriers"]
+    assert all(t >= 0.0 for t in r.params["barrier_seconds"])
+    assert set(r.params["group_seconds"]) == set(r.params["strides"])
+    assert all(t >= 0.0 for t in r.params["group_seconds"].values())
+
+
+def test_unknown_scheduler_rejected():
+    with pytest.raises(ValueError, match="scheduler"):
+        pack_portfolio(_problem(32), scheduler="threads", **_KW)
+
+
+# ------------------------------------------------- legacy threads = baseline
+def test_threads_engine_is_baseline_only():
+    """pack_portfolio_threads is the wall-clock benchmark baseline, not a
+    supported execution path: no determinism, scheduler, or checkpoint
+    surface — pinned so nobody quietly grows one."""
+    doc = pack_portfolio_threads.__doc__
+    assert "baseline" in doc
+    import inspect
+
+    params = inspect.signature(pack_portfolio_threads).parameters
+    for absent in ("scheduler", "fused", "checkpoint_dir", "resume"):
+        assert absent not in params

@@ -1,0 +1,93 @@
+#!/usr/bin/env python
+"""CI portfolio-throughput smoke gate (ISSUE 7 satellite).
+
+Times the MIXED island lineup — the one the serial barrier loop lost to
+the legacy thread pool by 4x — on a tiny wall budget, fleet-native
+`pack_portfolio` vs the `pack_portfolio_threads` baseline, and fails if
+the fleet's aggregate iteration throughput drops below a soft threshold
+of the baseline's:
+
+    python tools/portfolio_gate.py                 # defaults: 0.7x @ 1.5s
+    python tools/portfolio_gate.py --threshold 0.9 --budget 3.0
+
+The threshold is deliberately SOFT (0.7x, not the >= 1.0x the real bench
+shows on 12s budgets): a 1-2 second CI budget on a loaded shared runner
+is noisy, and this lane exists to catch the pathological regression —
+the serial-loop 0.24x cliff — not to benchmark.  Quality is asserted
+only as a sanity bound (the fleet must beat the singleton baseline);
+cost-vs-threads comparisons at CI budgets are pure noise.
+
+Set ``PORTFOLIO_GATE_SKIP=1`` to skip the gate entirely (e.g. on
+known-oversubscribed runners); it exits 0 without running anything.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+MIXED = ("ga-nfd", "sa-s", "sa-nfd")
+
+
+def _throughput(res) -> float:
+    return res.iterations / max(res.wall_time_s, 1e-9)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--accelerator", default="CNV-W1A1")
+    ap.add_argument("--budget", type=float, default=1.5,
+                    help="wall seconds per engine (default 1.5)")
+    ap.add_argument("--threshold", type=float, default=0.7,
+                    help="min fleet/threads throughput ratio (default 0.7)")
+    ap.add_argument("--islands", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if os.environ.get("PORTFOLIO_GATE_SKIP") == "1":
+        print("portfolio gate: skipped (PORTFOLIO_GATE_SKIP=1)")
+        return 0
+
+    import warnings
+
+    import repro.core as c
+    from repro.core.portfolio import pack_portfolio_threads
+
+    prob = c.get_problem(args.accelerator)
+    hp = c.hyperparams(args.accelerator)
+    kw = dict(n_islands=args.islands, algorithms=MIXED, seed=args.seed,
+              max_seconds=args.budget, sa_chains=8, **hp)
+    with warnings.catch_warnings():
+        # wall-budgeted on purpose: the truncation RuntimeWarning is expected
+        warnings.simplefilter("ignore", RuntimeWarning)
+        rt = pack_portfolio_threads(prob, **kw)
+        rf = c.pack_portfolio(prob, **kw)
+    tput_t, tput_f = _throughput(rt), _throughput(rf)
+    ratio = tput_f / max(tput_t, 1e-9)
+    singleton = prob.singleton_solution().cost()
+    print(f"portfolio gate [{args.accelerator} mixed x{args.islands} "
+          f"@{args.budget}s]:")
+    print(f"  threads : {rt.iterations:>9d} iters  {tput_t:>10.0f}/s  "
+          f"cost {rt.cost}")
+    print(f"  fleet   : {rf.iterations:>9d} iters  {tput_f:>10.0f}/s  "
+          f"cost {rf.cost}  (scheduler={rf.params['scheduler']}, "
+          f"fused={rf.params['fused']})")
+    print(f"  ratio   : {ratio:.2f}x  (soft threshold {args.threshold:.2f}x)")
+    if rf.cost >= singleton:
+        print(f"FAIL: fleet cost {rf.cost} did not beat the singleton "
+              f"baseline {singleton}")
+        return 1
+    if ratio < args.threshold:
+        print(f"FAIL: fleet throughput {ratio:.2f}x threads is below the "
+              f"{args.threshold:.2f}x gate — the concurrent barrier "
+              "scheduler has regressed (see docs/DESIGN.md section 13)")
+        return 1
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
