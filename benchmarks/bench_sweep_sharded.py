@@ -1,0 +1,140 @@
+"""Mesh-sharded fleet scaling benchmark: ``pack_sweep`` at 1/2/4/8 shards.
+
+The PR-8 deliverable (`--only sweep_sharded`): the Table-1 x (ZU7EV, U50)
+x seeds sweep fleet, solved by ``pack_sweep(..., n_shards=k)`` at k = 1,
+2, 4 and 8 host-platform shards, reporting aggregate candidates/sec and
+the scaling ratio against the one-fleet baseline.  Sharding is an
+execution-shape knob only, so every shard count must return **bit-
+identical** per-candidate costs and packings (hard-asserted here — the
+``parity`` column/flag).
+
+Two outputs:
+
+* ``sweep_sharded`` CSV (`benchmarks/out/sweep_sharded.csv`) — one row per
+  shard count.
+* ``BENCH_sweep.json`` (`benchmarks/out/BENCH_sweep.json`) — the
+  machine-readable scaling record: candidates/sec per shard count,
+  scaling ratios, the cost-parity flag, and the host shape
+  (``n_cpus``/``n_devices``) the numbers were measured under.
+
+Honest-throughput note (docs/DESIGN.md section 14): thread-level shard
+concurrency can only beat the one-fleet baseline when the host has cores
+(or devices) to run shards on.  On a 1-vCPU container the shards
+time-slice one core, so candidates/sec stays roughly flat; the >= 3x
+aggregate-throughput target at 8 shards is therefore asserted only when
+``os.cpu_count() >= 8`` and otherwise reported with a warning line.  The
+parity assertion is unconditional — results never depend on the host.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import repro.core as c
+
+from .bench_dse import _fleet
+from .common import OUT_DIR, emit
+
+SHARD_COUNTS = (1, 2, 4, 8)
+SPEEDUP_TARGET = 3.0  # >= 3x aggregate throughput at 8 shards (PR 8)
+
+
+def _n_devices() -> int:
+    try:
+        import jax
+
+        return len(jax.devices())
+    except Exception:
+        return 0
+
+
+def run(quick: bool = False, n_chains: int = 8, iterations: int | None = None,
+        smoke: bool = False):
+    if smoke:
+        n_chains = min(n_chains, 4)
+    probs, seeds = _fleet(quick, smoke)
+    iters = (
+        iterations if iterations is not None
+        else (60 if smoke else 800 if quick else 2000)
+    )
+    kw = dict(
+        max_seconds=1e9, patience=10**9, max_iterations=iters,
+        backend="python", n_chains=n_chains,
+    )
+    # warmup: one-time NFD/codec setup off the clocks
+    c.pack_sweep(probs[:2], "sa-s", seeds=seeds[:2],
+                 **{**kw, "max_iterations": 40})
+
+    base_costs = None
+    base_rate = None
+    parity = True
+    rows = []
+    scaling: dict[str, dict] = {}
+    for k in SHARD_COUNTS:
+        t0 = time.perf_counter()
+        sweep = c.pack_sweep(probs, "sa-s", seeds=seeds, n_shards=k, **kw)
+        wall = time.perf_counter() - t0
+        costs = [r.cost for r in sweep.results]
+        if base_costs is None:
+            base_costs = costs
+            base_packings = [r.solution.state_dict() for r in sweep.results]
+            base_rate = len(probs) / wall
+        match = costs == base_costs and (
+            [r.solution.state_dict() for r in sweep.results] == base_packings
+        )
+        parity = parity and match
+        rate = len(probs) / wall
+        rows.append([
+            k, len(probs), sweep.n_groups, n_chains, iters, round(wall, 2),
+            round(rate, 2), round(rate / base_rate, 2), match,
+        ])
+        scaling[str(k)] = {
+            "wall_s": round(wall, 3),
+            "candidates_per_sec": round(rate, 3),
+            "speedup_vs_1_shard": round(rate / base_rate, 3),
+        }
+    header = [
+        "n_shards", "candidates", "groups", "n_chains", "iters_per_candidate",
+        "wall_s", "candidates_per_sec", "speedup_vs_1_shard", "costs_match",
+    ]
+    emit("sweep_sharded", header, rows)
+    assert parity, "sharded sweeps must be bit-identical to n_shards=1"
+
+    n_cpus = os.cpu_count() or 1
+    top = scaling[str(SHARD_COUNTS[-1])]["speedup_vs_1_shard"]
+    gated = n_cpus < SHARD_COUNTS[-1]
+    record = {
+        "bench": "sweep_sharded",
+        "candidates": len(probs),
+        "n_chains": n_chains,
+        "iters_per_candidate": iters,
+        "shard_counts": list(SHARD_COUNTS),
+        "scaling": scaling,
+        "cost_parity": parity,
+        "speedup_target": SPEEDUP_TARGET,
+        "speedup_at_max_shards": top,
+        "speedup_target_met": top >= SPEEDUP_TARGET,
+        "n_cpus": n_cpus,
+        "n_devices": _n_devices(),
+        "cpu_bound": gated,
+    }
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    path = OUT_DIR / "BENCH_sweep.json"
+    path.write_text(json.dumps(record, indent=2) + "\n")
+    print(f"--- BENCH_sweep.json ({path})")
+    print(json.dumps(record, indent=2))
+    if gated and top < SPEEDUP_TARGET:
+        print(
+            f"[warn] {top:.2f}x at {SHARD_COUNTS[-1]} shards on a "
+            f"{n_cpus}-cpu host: shards time-slice the same core(s); the "
+            f">= {SPEEDUP_TARGET}x target needs >= {SHARD_COUNTS[-1]} "
+            "cores/devices (parity still holds)"
+        )
+    else:
+        assert top >= SPEEDUP_TARGET, (
+            f"expected >= {SPEEDUP_TARGET}x aggregate throughput at "
+            f"{SHARD_COUNTS[-1]} shards, measured {top:.2f}x on "
+            f"{n_cpus} cpus"
+        )
+    return record

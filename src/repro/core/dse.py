@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Sequence
 
 import numpy as np
@@ -84,6 +85,12 @@ class SweepResult:
     n_groups: int
     algorithm: str
     fresh: tuple[int, ...] = ()
+    #: sweep-level counters (PR 8): ``solved`` unique tasks solved this call,
+    #: ``cache_hits`` unique tasks served from the cache / checkpoint store,
+    #: ``dedup_hits`` positions collapsed by fingerprint dedup (so
+    #: ``solved + cache_hits + dedup_hits == len(problems)``), plus the
+    #: execution-shape knob ``n_shards``.
+    params: dict = dataclasses.field(default_factory=dict)
 
     @property
     def size(self) -> int:
@@ -173,16 +180,118 @@ def _group_by_cost_model(indices, problems) -> list[list[int]]:
     return list(groups.values())
 
 
+def shard_chunks(n: int, k: int) -> list[list[int]]:
+    """Contiguous balanced split of ``range(n)`` into ``min(k, n)`` chunks.
+
+    The first ``n % k`` chunks carry one extra row.  Contiguity is
+    load-bearing: shard boundaries become plain row slices of the canonical
+    merged checkpoint layout (``resume.merge_block_states``), so snapshots
+    restore onto ANY shard count (docs/DESIGN.md section 14).
+    """
+    k = max(1, min(int(k), n))
+    base, rem = divmod(n, k)
+    out, lo = [], 0
+    for i in range(k):
+        size = base + (1 if i < rem else 0)
+        out.append(list(range(lo, lo + size)))
+        lo += size
+    return out
+
+
+def _shard_devices(mesh, n_chunks: int, backend: str):
+    """Round-robin device pins for host-split shards (``n_shards > 1`` AND a
+    mesh): shard ``i`` dispatches on ``devices[i % len]``.  With one chunk
+    the mesh goes down the ``shard_map`` path instead, and the ``"python"``
+    backend never touches jax devices."""
+    if mesh is None or n_chunks <= 1 or backend not in ("ref", "pallas"):
+        return None
+    return list(mesh.devices.flat)
+
+
+def _solve_sa_group_sharded(
+    packer, probs, rngs, backend, n_shards, mesh, gkeys=None, ck=None
+) -> list:
+    """One cost-model group annealed as ``n_shards`` concurrent sub-fleets.
+
+    Each shard is a contiguous problem slice started as its own
+    `_block_start` block and advanced on a thread; per-problem trajectories
+    are fleet-composition-independent (each live problem consumes only its
+    own RNG stream and frozen problems never draw), so results are
+    bit-identical to the one-fleet lane — pinned in ``tests/test_sharded.py``.
+    Checkpoints are cut in the canonical MERGED layout
+    (`resume.merge_block_states`), identical to the unsharded snapshot, so a
+    crashed sharded sweep may resume at any other shard count.
+    """
+    chunks = shard_chunks(len(probs), n_shards)
+    shard_mesh = mesh if len(chunks) == 1 else None
+    devices = _shard_devices(mesh, len(chunks), backend)
+    sts = [
+        packer._block_start(
+            [probs[j] for j in c], [rngs[j] for j in c],
+            [[] for _ in c], backend, mesh=shard_mesh,
+        )
+        for c in chunks
+    ]
+    gd = None
+    if ck is not None:
+        from .resume import group_digest, merge_block_states
+
+        gd = group_digest(gkeys)
+        ck.restore_block_shards(gd, sts, packer.patience)
+
+    def run(si, limit):
+        st = sts[si]
+        if st.done:
+            return
+        if devices is not None:
+            import jax
+
+            with jax.default_device(devices[si % len(devices)]):
+                packer._block_run(st, limit)
+        else:
+            packer._block_run(st, limit)
+
+    while not all(st.done for st in sts):
+        if ck is None:
+            limit = None  # each shard drains to its budgets in one call
+        else:
+            it = max(st.it for st in sts if not st.done)
+            limit = (it // ck.every + 1) * ck.every
+        live = [i for i, st in enumerate(sts) if not st.done]
+        if len(live) == 1:
+            run(live[0], limit)
+        else:
+            with ThreadPoolExecutor(max_workers=len(live)) as ex:
+                for _ in ex.map(lambda si: run(si, limit), live):
+                    pass
+        if ck is not None and not all(st.done for st in sts):
+            arrays, extra = merge_block_states(sts)
+            ck.save_progress(group=gd, arrays=arrays, engine=extra)
+    blocks = []
+    for st in sts:
+        blocks.extend(packer._block_finish(st))
+    return blocks
+
+
 def _solve_sa_groups(
-    packer, groups, problems, seeds, backend, keys=None, ck=None
+    packer, groups, problems, seeds, backend, keys=None, ck=None,
+    n_shards=1, mesh=None,
 ) -> dict[int, PackingResult]:
     out: dict[int, PackingResult] = {}
     for group in groups:
         probs = [problems[i] for i in group]
         rngs = [np.random.default_rng(seeds[i]) for i in group]
         packer._hetero = probs[0].n_kinds > 1
-        if ck is None:
-            blocks = packer._anneal_block(probs, rngs, [[] for _ in group], backend)
+        if n_shards > 1 and len(group) > 1:
+            gkeys = [keys[i] for i in group] if keys is not None else None
+            blocks = _solve_sa_group_sharded(
+                packer, probs, rngs, backend, n_shards, mesh,
+                gkeys=gkeys, ck=ck,
+            )
+        elif ck is None:
+            blocks = packer._anneal_block(
+                probs, rngs, [[] for _ in group], backend, mesh=mesh
+            )
         else:
             # checkpointed lane: same start/run/finish phases, but paused at
             # iteration barriers for durable snapshots.  Barrier segmentation
@@ -191,7 +300,9 @@ def _solve_sa_groups(
             from .resume import encode_block_state, group_digest
 
             gd = group_digest([keys[i] for i in group])
-            st = packer._block_start(probs, rngs, [[] for _ in group], backend)
+            st = packer._block_start(
+                probs, rngs, [[] for _ in group], backend, mesh=mesh
+            )
             ck.restore_block(gd, st)  # overwrite from snapshot if it matches
             while not st.done:
                 packer._block_run(st, (st.it // ck.every + 1) * ck.every)
@@ -212,7 +323,7 @@ def _solve_sa_groups(
     return out
 
 
-def _lockstep_drain(pairs, gen_limit=None) -> bool:
+def _lockstep_drain(pairs, gen_limit=None, mesh=None) -> bool:
     """One lockstep generation through the GA segment API — identical to
     ``ga.lockstep_generation`` (which wraps the same phases), written out so
     the sweep lane exercises the begin/apply/finish contract the portfolio's
@@ -222,14 +333,15 @@ def _lockstep_drain(pairs, gen_limit=None) -> bool:
         lockstep_apply(
             batch,
             stacked_population_costs(
-                [r for _, r, _ in batch], batch[0][1].backend
+                [r for _, r, _ in batch], batch[0][1].backend, mesh=mesh
             ),
         )
     return lockstep_finish(advanced)
 
 
 def _solve_ga_groups(
-    packer, groups, problems, seeds, backend, keys=None, ck=None
+    packer, groups, problems, seeds, backend, keys=None, ck=None,
+    n_shards=1, mesh=None,
 ) -> dict[int, PackingResult]:
     out: dict[int, PackingResult] = {}
     for group in groups:
@@ -239,18 +351,50 @@ def _solve_ga_groups(
             )
             for i in group
         ]
-        totals = stacked_population_costs(runs, backend)
+        chunks = shard_chunks(len(runs), n_shards)
+        shard_mesh = mesh if len(chunks) == 1 else None
+        devices = _shard_devices(mesh, len(chunks), backend)
+        totals = stacked_population_costs(runs, backend, mesh=shard_mesh)
         for run, tot in zip(runs, totals):
             packer._eval_init(run, tot)
         # drive the GA segment API directly (ga.lockstep_begin / apply /
         # finish): per generation, one mutation phase across every live run,
         # one stacked fitness call per population-size batch, then
         # selection — the same phases the fleet-native portfolio fuses with
-        # SA work at its barriers (docs/DESIGN.md section 13)
-        pairs = [(packer, run) for run in runs]
+        # SA work at its barriers (docs/DESIGN.md section 13).  With
+        # ``n_shards > 1`` the group's runs split into contiguous lockstep
+        # sub-packs, each drained on its own thread: fitness values are
+        # per-individual, so stack membership never changes any trajectory
+        # (pinned in tests/test_sharded.py).
+        pair_chunks = [[(packer, runs[j]) for j in c] for c in chunks]
+
+        def drain_chunk(ci, glimit):
+            pc = pair_chunks[ci]
+            if devices is not None:
+                import jax
+
+                with jax.default_device(devices[ci % len(devices)]):
+                    while _lockstep_drain(pc, glimit):
+                        pass
+            else:
+                while _lockstep_drain(pc, glimit, mesh=shard_mesh):
+                    pass
+
+        def drain_all(glimit):
+            live = [
+                ci for ci, c in enumerate(chunks)
+                if any(not runs[j].done for j in c)
+            ]
+            if len(live) <= 1:
+                for ci in live:
+                    drain_chunk(ci, glimit)
+            else:
+                with ThreadPoolExecutor(max_workers=len(live)) as ex:
+                    for _ in ex.map(lambda ci: drain_chunk(ci, glimit), live):
+                        pass
+
         if ck is None:
-            while _lockstep_drain(pairs):
-                pass
+            drain_all(None)
         else:
             from .resume import encode_ga_group, group_digest
 
@@ -261,8 +405,7 @@ def _solve_ga_groups(
                 if not live:
                     break
                 glimit = (min(live) // ck.every + 1) * ck.every
-                while _lockstep_drain(pairs, glimit):
-                    pass
+                drain_all(glimit)
                 if all(run.done for run in runs):
                     break
                 arrays, extras = encode_ga_group(runs)
@@ -290,6 +433,8 @@ def pack_sweep(
     checkpoint_every: int = 256,
     resume: bool = False,
     on_checkpoint=None,
+    n_shards: int = 1,
+    mesh=None,
     **hyper,
 ) -> SweepResult:
     """Solve a fleet of packing problems in one vectorized run.
@@ -327,8 +472,20 @@ def pack_sweep(
     fault-injection hook).  Resumed-from-checkpoint candidates count as
     cache hits, not fresh solves.
 
-    Returns a :class:`SweepResult` with per-candidate results (input order),
-    an efficiency/Pareto table, and throughput counters.
+    Scaling past one device (PR 8, docs/DESIGN.md section 14):
+
+    * ``n_shards`` — split each batched group into that many contiguous
+      sub-fleets (SA) / lockstep sub-packs (GA), advanced concurrently on
+      threads.  Per-problem trajectories are fleet-composition-independent,
+      so any shard count is **bit-identical** to ``n_shards=1`` (pinned in
+      ``tests/test_sharded.py``); checkpoints are cut in a canonical merged
+      layout, so a crashed sharded sweep resumes at any other shard count.
+    * ``mesh`` — a 1-D ``("prob",)`` device mesh
+      (:func:`repro.launch.mesh.make_sweep_mesh`).  With ``n_shards=1`` the
+      batched kernels row-shard each step over the mesh via ``shard_map``;
+      with ``n_shards > 1`` the sub-fleets are instead pinned round-robin
+      to the mesh's devices.  Jax backends ("ref"/"pallas") only; the
+      ``"python"`` backend and the serial fallback lane ignore both knobs.
     """
     from .api import make_packer, pack as _pack  # late: api re-exports us
 
@@ -344,6 +501,9 @@ def pack_sweep(
             raise ValueError("seeds must align with problems")
     if algorithm in _SA_BATCHED:
         hyper.setdefault("n_chains", 8)
+    n_shards = int(n_shards)
+    if n_shards < 1:
+        raise ValueError("n_shards must be >= 1")
     t_start = time.perf_counter()
 
     keys = _task_keys(problems, algorithm, seeds, intra_layer, backend,
@@ -396,13 +556,15 @@ def pack_sweep(
             groups = _group_by_cost_model(todo, problems)
             n_groups = len(groups)
             solved = _solve_sa_groups(
-                packer, groups, problems, seeds, resolved, keys=keys, ck=ck
+                packer, groups, problems, seeds, resolved, keys=keys, ck=ck,
+                n_shards=n_shards, mesh=mesh,
             )
         elif algorithm in _GA_LOCKSTEP and resolved in ("ref", "pallas"):
             groups = _group_by_cost_model(todo, problems)
             n_groups = len(groups)
             solved = _solve_ga_groups(
-                packer, groups, problems, seeds, resolved, keys=keys, ck=ck
+                packer, groups, problems, seeds, resolved, keys=keys, ck=ck,
+                n_shards=n_shards, mesh=mesh,
             )
         else:
             # serial fallback: scalar/legacy engines, heuristics, portfolio.
@@ -432,4 +594,10 @@ def pack_sweep(
         n_groups=n_groups,
         algorithm=algorithm,
         fresh=fresh,
+        params=dict(
+            solved=len(fresh),
+            cache_hits=len(set(keys)) - len(fresh),
+            dedup_hits=len(problems) - len(set(keys)),
+            n_shards=n_shards,
+        ),
     )

@@ -325,6 +325,7 @@ class GeneticPacker:
         Km: np.ndarray | None = None,
         kind_tables=None,
         modes=None,
+        mesh=None,
     ) -> np.ndarray:
         import jax.numpy as jnp
 
@@ -336,7 +337,7 @@ class GeneticPacker:
             # BRAM18_MODES on default problems, so the jit cache is shared)
             totals = population_costs(
                 jnp.asarray(W), jnp.asarray(H), modes=modes,
-                backend=backend, interpret=interpret,
+                backend=backend, interpret=interpret, mesh=mesh,
             )
         else:
             totals = population_costs(
@@ -346,6 +347,7 @@ class GeneticPacker:
                 interpret=interpret,
                 kinds=jnp.asarray(Km),
                 kind_tables=kind_tables,
+                mesh=mesh,
             )
         return np.asarray(totals, dtype=np.float64)
 
@@ -666,15 +668,18 @@ def stack_geometry(runs: Sequence["_GARun"]):
     return W, H, Km
 
 
-def stacked_population_costs(runs: Sequence["_GARun"], backend: str) -> np.ndarray:
+def stacked_population_costs(
+    runs: Sequence["_GARun"], backend: str, mesh=None
+) -> np.ndarray:
     """One leading-problem-axis fitness call over several GA runs (see
     :func:`stack_geometry` for the padding contract).  Shared by
     ``core.dse``'s sweep driver (many problems, one packer) and
     ``core.portfolio``'s island driver (one problem, many packers).
+    ``mesh`` (a ``("prob",)`` sweep mesh) row-shards the stacked call.
     """
     W, H, Km = stack_geometry(runs)
     return GeneticPacker._batched_costs(
-        W, H, backend, Km, runs[0].kt, runs[0].modes0
+        W, H, backend, Km, runs[0].kt, runs[0].modes0, mesh=mesh
     )
 
 
@@ -739,6 +744,7 @@ def lockstep_finish(advanced: Sequence[tuple]) -> bool:
 def lockstep_generation(
     pairs: Sequence[tuple[GeneticPacker, "_GARun"]],
     gen_limit: int | None = None,
+    mesh=None,
 ) -> bool:
     """Advance ONE generation for every live (packer, run) pair in lockstep.
 
@@ -750,12 +756,14 @@ def lockstep_generation(
     portfolio barrier without marking them done; budget/patience/wall
     exhaustion marks ``run.done``.  Returns True while any pair advanced.
     (A thin driver over the segment phases :func:`lockstep_begin` /
-    :func:`lockstep_apply` / :func:`lockstep_finish`.)
+    :func:`lockstep_apply` / :func:`lockstep_finish`.)  ``mesh`` row-shards
+    each stacked fitness call over a ``("prob",)`` sweep mesh (PR 8) —
+    bit-identical, jax backends only.
     """
     advanced, batches = lockstep_begin(pairs, gen_limit)
     for batch in batches:
         totals = stacked_population_costs(
-            [r for _, r, _ in batch], batch[0][1].backend
+            [r for _, r, _ in batch], batch[0][1].backend, mesh=mesh
         )
         lockstep_apply(batch, totals)
     return lockstep_finish(advanced)

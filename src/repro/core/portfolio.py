@@ -48,6 +48,7 @@ from typing import Sequence
 
 import numpy as np
 
+from .dse import _shard_devices, shard_chunks
 from .ga import (
     GeneticPacker,
     lockstep_apply,
@@ -109,21 +110,73 @@ class _SAFleetGroup:
     Row ``j * C + c`` is chain ``c`` of island ``j``; the bin-slot envelope
     is widened to ``prob.n`` so any migrant packing can be encoded into a
     chain slot (envelope padding never affects trajectories — DESIGN.md
-    section 10)."""
+    section 10).
 
-    def __init__(self, packer, prob, rngs, backend):
+    ``n_shards`` splits the islands into contiguous sub-fleets, one block
+    state per shard, advanced concurrently on threads at every barrier;
+    ``mesh`` row-shards each fleet step over a ``("prob",)`` device mesh
+    (with one shard) or pins the sub-fleets round-robin to the mesh's
+    devices (with several).  Both are pure execution-shape knobs: each
+    island consumes only its own RNG stream, so any shard count is
+    bit-identical to the one-fleet layout (docs/DESIGN.md section 14,
+    pinned in ``tests/test_sharded.py``)."""
+
+    def __init__(self, packer, prob, rngs, backend, n_shards=1, mesh=None):
         self.packer = packer
-        self.st = packer._block_start(
-            [prob] * len(rngs), rngs, [[] for _ in rngs], backend,
-            n_slots=prob.n,
-        )
+        chunks = shard_chunks(len(rngs), n_shards)
+        shard_mesh = mesh if len(chunks) == 1 else None
+        self.devices = _shard_devices(mesh, len(chunks), backend)
+        self.sts = [
+            packer._block_start(
+                [prob] * len(c), [rngs[j] for j in c], [[] for _ in c],
+                backend, n_slots=prob.n, mesh=shard_mesh,
+            )
+            for c in chunks
+        ]
+        self._starts = [c[0] for c in chunks]
+
+    @property
+    def st(self):
+        """The lone block state of an unsharded fleet (the common case and
+        the fused-dispatch requirement); multi-shard fleets have no single
+        state — address islands through :meth:`state_of`."""
+        if len(self.sts) != 1:
+            raise RuntimeError(
+                f"fleet is split into {len(self.sts)} shards; use state_of(j)"
+            )
+        return self.sts[0]
+
+    def state_of(self, j: int):
+        """(block state, local row) owning island ``j``."""
+        for st, lo in zip(reversed(self.sts), reversed(self._starts)):
+            if j >= lo:
+                return st, j - lo
+        raise IndexError(j)
+
+    def _run_shard(self, si: int, limit: int | None) -> None:
+        st = self.sts[si]
+        if st.done:
+            return
+        if self.devices is not None:
+            import jax
+
+            with jax.default_device(self.devices[si % len(self.devices)]):
+                self.packer._block_run(st, limit)
+        else:
+            self.packer._block_run(st, limit)
 
     def advance(self, limit: int | None) -> bool:
-        if self.st.done:
+        live = [i for i, st in enumerate(self.sts) if not st.done]
+        if not live:
             return False
-        before = self.st.it
-        self.packer._block_run(self.st, limit)
-        return self.st.it > before
+        before = [self.sts[i].it for i in live]
+        if len(live) == 1:
+            self._run_shard(live[0], limit)
+        else:
+            with ThreadPoolExecutor(max_workers=len(live)) as ex:
+                for _ in ex.map(lambda i: self._run_shard(i, limit), live):
+                    pass
+        return any(self.sts[i].it > b for i, b in zip(live, before))
 
 
 class _FleetIsland:
@@ -135,12 +188,11 @@ class _FleetIsland:
         self.packer = group.packer
 
     def done(self) -> bool:
-        return self.group.st.done or self.packer._block_frozen(
-            self.group.st, self.j
-        )
+        st, j = self.group.state_of(self.j)
+        return st.done or self.packer._block_frozen(st, j)
 
     def raw(self) -> tuple[int, int]:
-        st, j = self.group.st, self.j
+        st, j = self.group.state_of(self.j)
         cost = int(st.gbest_cost[j])
         if st.hetero:
             ovf = int(st.batch.overflow_rows(
@@ -151,41 +203,48 @@ class _FleetIsland:
         return cost, ovf
 
     def best_solution(self) -> Solution:
-        st, j = self.group.st, self.j
+        st, j = self.group.state_of(self.j)
         return decode_chain_items(
             st.probs[j], st.g_items[j], st.g_counts[j],
             st.g_kinds[j] if st.hetero else None,
         )
 
     def migrate_in(self, sol: Solution) -> bool:
-        return self.packer._block_migrate(self.group.st, self.j, sol)
+        st, j = self.group.state_of(self.j)
+        return self.packer._block_migrate(st, j, sol)
 
     def trace(self) -> list:
-        return self.group.st.traces[self.j]
+        st, j = self.group.state_of(self.j)
+        return st.traces[j]
 
     def offset(self, t0: float) -> float:
-        return self.group.st.t_start - t0
+        st, _ = self.group.state_of(self.j)
+        return st.t_start - t0
 
     def iterations(self) -> int:
-        st, c = self.group.st, self.packer.n_chains
-        return int(st.steps[self.j * c : (self.j + 1) * c].sum())
+        (st, j), c = self.group.state_of(self.j), self.packer.n_chains
+        return int(st.steps[j * c : (j + 1) * c].sum())
 
     def truncated(self) -> bool:
         """True iff the fleet stopped on the wall-clock cap — done, but
         neither frozen (patience) nor out of iteration budget."""
-        st = self.group.st
+        st, _ = self.group.state_of(self.j)
         return st.done and not st.frozen and st.it < self.packer.max_iterations
 
 
 class _GAGroup:
-    """All GA islands, advanced in lockstep with stacked fitness calls."""
+    """All GA islands, advanced in lockstep with stacked fitness calls.
 
-    def __init__(self, pairs):
+    ``mesh`` row-shards each stacked fitness call over the ``("prob",)``
+    sweep mesh — execution shape only, bit-identical (PR 8)."""
+
+    def __init__(self, pairs, mesh=None):
         self.pairs = pairs  # [(packer, run)] in island order
+        self.mesh = mesh
 
     def advance(self, limit: int | None) -> bool:
         progressed = False
-        while lockstep_generation(self.pairs, gen_limit=limit):
+        while lockstep_generation(self.pairs, gen_limit=limit, mesh=self.mesh):
             progressed = True
         return progressed
 
@@ -362,7 +421,7 @@ def _advance_fused(
     Returns (fleet_progressed, ga_progressed)."""
     from repro.kernels.binpack_portfolio_step.ops import portfolio_step
 
-    packer, st = fleet.packer, fleet.st
+    packer, st = fleet.packer, fleet.sts[0]  # fuse requires one shard
     before = st.it
     gen = None if st.done else packer._block_gen(st, fleet_limit)
     req = next(gen, None) if gen is not None else None
@@ -380,6 +439,7 @@ def _advance_fused(
                 modes=st.modes0, backend=st.backend, interpret=st.interpret,
                 kinds=Km, old_k=old_k, new_k=new_k,
                 kind_tables=st.kt if old_k is not None else None,
+                mesh=st.mesh,
             )
             lockstep_apply(batch, totals)
             batches = []
@@ -390,7 +450,8 @@ def _advance_fused(
             lockstep_apply(
                 batch,
                 stacked_population_costs(
-                    [r for _, r, _ in batch], batch[0][1].backend
+                    [r for _, r, _ in batch], batch[0][1].backend,
+                    mesh=ga.mesh,
                 ),
             )
         if lockstep_finish(advanced):
@@ -416,6 +477,8 @@ def pack_portfolio(
     checkpoint_every: int = 1,
     resume: bool = False,
     on_checkpoint=None,
+    n_shards: int = 1,
+    mesh=None,
     **hyper,
 ) -> PackingResult:
     """Run K differently-seeded islands as one fleet; return the best result.
@@ -475,6 +538,19 @@ def pack_portfolio(
     ``max_workers`` is deprecated and ignored: the fleet-native portfolio
     has no thread pool (see :func:`pack_portfolio_threads` for the legacy
     engine, kept as a benchmark baseline).
+
+    Scaling past one device (PR 8, docs/DESIGN.md section 14): ``n_shards``
+    splits the sa-s island fleet into that many contiguous sub-fleets
+    advanced concurrently between barriers, and ``mesh`` (a
+    :func:`repro.launch.mesh.make_sweep_mesh` device mesh) row-shards the
+    fleet's annealing steps and the GA pack's stacked fitness calls over
+    its ``("prob",)`` axis (one shard) or pins the sub-fleets round-robin
+    to its devices (several shards).  Both are execution-shape knobs only:
+    every shard count and mesh is **bit-identical** to the default
+    single-device run, and checkpoints are cut in a canonical merged layout
+    so a run may resume at a different shard count (pinned in
+    ``tests/test_sharded.py``).  Fused dispatch needs the fleet in one
+    piece, so ``n_shards > 1`` disables it.
 
     Crash safety (docs/DESIGN.md section 12): with ``checkpoint_dir`` the
     run cuts a durable snapshot of every island's engine state (plus the
@@ -573,7 +649,9 @@ def pack_portfolio(
                 prob, np.random.default_rng(packer.seed), None, b
             )
             totals = (
-                packer._batched_costs(run.W, run.H, b, run.Km, run.kt, run.modes0)
+                packer._batched_costs(
+                    run.W, run.H, b, run.Km, run.kt, run.modes0, mesh=mesh
+                )
                 if run.batched
                 else None
             )
@@ -597,14 +675,19 @@ def pack_portfolio(
             fleet_members.setdefault(_sa_fleet_key(packer, resolved), []).append(
                 (k, packer)
             )
+    n_shards = int(n_shards)
+    if n_shards < 1:
+        raise ValueError("n_shards must be >= 1")
     if ga_pairs:
-        groups.append(_GAGroup(ga_pairs))
+        groups.append(_GAGroup(ga_pairs, mesh=mesh))
     for members in fleet_members.values():
         fleet = _SAFleetGroup(
             members[0][1],
             prob,
             [np.random.default_rng(p.seed) for _, p in members],
             members[0][1]._resolve_backend(),
+            n_shards=n_shards,
+            mesh=mesh,
         )
         groups.append(fleet)
         for j, (k, _) in enumerate(members):
@@ -655,10 +738,11 @@ def pack_portfolio(
     fuse = (
         scheduler == "concurrent" and fi is not None and gi is not None
         and sum(isinstance(g, _SAFleetGroup) for g in groups) == 1
+        and len(groups[fi].sts) == 1  # fused dispatch needs one fleet shard
         and (
             fused if fused is not None
             else (
-                groups[fi].st.backend in ("ref", "pallas")
+                groups[fi].sts[0].backend in ("ref", "pallas")
                 and all(r.backend in ("ref", "pallas") and r.batched
                         for _, r in groups[gi].pairs)
             )
@@ -778,6 +862,7 @@ def pack_portfolio(
             backend=backend,
             seed=seed,
             scheduler=scheduler,
+            n_shards=n_shards,
             fused=bool(fuse),
             strides=dict(zip(labels, strides)),
             barrier_seconds=barrier_seconds,

@@ -649,6 +649,7 @@ class SimulatedAnnealingPacker:
         rngs: Sequence[np.random.Generator],
         inits: Sequence[Sequence[Solution]],
         backend: str,
+        mesh=None,
     ) -> list[_BlockOut]:
         """The vectorized annealer over a *fleet*: P problems x C chains.
 
@@ -672,7 +673,7 @@ class SimulatedAnnealingPacker:
         ``core.portfolio`` replicates one problem K times through the same
         helpers and pauses `_block_run` at migration barriers.
         """
-        st = self._block_start(probs, rngs, inits, backend)
+        st = self._block_start(probs, rngs, inits, backend, mesh=mesh)
         self._block_run(st)
         return self._block_finish(st)
 
@@ -683,11 +684,16 @@ class SimulatedAnnealingPacker:
         inits: Sequence[Sequence[Solution]],
         backend: str,
         n_slots: int | None = None,
+        mesh=None,
     ) -> _BlockState:
         """Encode a fleet's chain state; ``n_slots`` widens the bin-slot
         envelope (the portfolio passes ``prob.n`` so any migrant fits —
-        envelope padding never affects trajectories, see DESIGN.md §10)."""
+        envelope padding never affects trajectories, see DESIGN.md §10).
+        ``mesh`` (a ``("prob",)`` sweep mesh) row-shards the delta kernel on
+        jax backends — a start-derived constant, never serialized (resume
+        may restore onto a different mesh/shard count, DESIGN.md §14)."""
         st = _BlockState()
+        st.mesh = mesh if backend in ("ref", "pallas") else None
         n_probs = st.n_probs = len(probs)
         n_chains = self.n_chains
         n_rows = st.n_rows = n_probs * n_chains
@@ -791,11 +797,11 @@ class SimulatedAnnealingPacker:
             return sa_step_deltas(
                 old_w, old_h, new_w, new_h, backend=st.backend,
                 interpret=st.interpret, old_k=old_k, new_k=new_k,
-                kind_tables=st.kt,
+                kind_tables=st.kt, mesh=st.mesh,
             )
         return sa_step_deltas(
             old_w, old_h, new_w, new_h, modes=st.modes0,
-            backend=st.backend, interpret=st.interpret,
+            backend=st.backend, interpret=st.interpret, mesh=st.mesh,
         )
 
     def _block_run(self, st: _BlockState, it_limit: int | None = None) -> None:
@@ -815,12 +821,12 @@ class SimulatedAnnealingPacker:
                 d_e = sa_step_deltas(
                     old_w, old_h, new_w, new_h, backend=st.backend,
                     interpret=st.interpret, old_k=old_k, new_k=new_k,
-                    kind_tables=st.kt,
+                    kind_tables=st.kt, mesh=st.mesh,
                 )
             else:
                 d_e = sa_step_deltas(
                     old_w, old_h, new_w, new_h, modes=st.modes0,
-                    backend=st.backend, interpret=st.interpret,
+                    backend=st.backend, interpret=st.interpret, mesh=st.mesh,
                 )
             try:
                 req = gen.send(d_e)

@@ -42,6 +42,7 @@ def population_costs(
     interpret=True,
     kinds=None,
     kind_tables=None,
+    mesh=None,
 ):
     """(P, NB) geometry -> (P,) total cost per individual.
 
@@ -55,6 +56,12 @@ def population_costs(
     docs/DESIGN.md section 10).  Padded lanes are masked by the zero-width
     convention: a padded bin slot (or an entirely padded problem row) has
     width 0 and costs nothing.
+
+    ``mesh`` (a 1-D ``("prob",)`` mesh from ``launch.mesh.make_sweep_mesh``)
+    row-shards the evaluation across devices via ``shard_map``: the leading
+    axis is zero-padded to a multiple of the mesh size, each device costs
+    its contiguous row block, and results are bit-identical to the
+    unsharded call (exact integer arithmetic — docs/DESIGN.md section 14).
     """
     widths = jnp.asarray(widths)
     heights = jnp.asarray(heights)
@@ -68,6 +75,7 @@ def population_costs(
             interpret=interpret,
             kinds=None if kinds is None else jnp.asarray(kinds).reshape(np_ * p_, nb_),
             kind_tables=kind_tables,
+            mesh=mesh,
         )
         return totals.reshape(np_, p_)
     if backend == "auto":
@@ -75,6 +83,11 @@ def population_costs(
             backend, interpret = "pallas", False
         else:
             backend = "ref"
+    if mesh is not None:
+        return _population_costs_sharded(
+            widths, heights, modes, backend, interpret, kinds, kind_tables,
+            mesh,
+        )
     if kinds is not None:
         if kind_tables is None:
             raise ValueError("kinds requires kind_tables")
@@ -95,3 +108,58 @@ def population_costs(
     if backend != "ref":
         raise ValueError(f"unknown backend {backend!r}; options: auto, pallas, ref")
     return _ref_totals(widths, heights, tuple(modes))
+
+
+_SHARD_CACHE: dict = {}
+
+
+def _population_costs_sharded(
+    widths, heights, modes, backend, interpret, kinds, kind_tables, mesh
+):
+    """Row-sharded evaluation over the ``("prob",)`` mesh (PR 8)."""
+    from repro.kernels.probshard import mesh_size, pad_rows, row_shard
+
+    k = mesh_size(mesh)
+    hetero = kinds is not None
+    if hetero:
+        if kind_tables is None:
+            raise ValueError("kinds requires kind_tables")
+        kind_tables = tuple((int(w), tuple(m)) for w, m in kind_tables)
+        key = (mesh, backend, interpret, kind_tables)
+    else:
+        modes = tuple(modes)
+        key = (mesh, backend, interpret, modes)
+    fn = _SHARD_CACHE.get(key)
+    if fn is None:
+        if backend == "pallas":
+            if hetero:
+                def body(w, h, kk):
+                    return jnp.sum(
+                        binpack_fitness_kinds_pallas(
+                            w, h, kk, kind_tables, interpret
+                        ),
+                        axis=1,
+                    )
+            else:
+                def body(w, h):
+                    return jnp.sum(
+                        binpack_fitness_pallas(w, h, modes, interpret), axis=1
+                    )
+        elif backend == "ref":
+            if hetero:
+                def body(w, h, kk):
+                    return jnp.sum(
+                        binpack_fitness_kinds_ref(w, h, kk, kind_tables),
+                        axis=1,
+                    )
+            else:
+                def body(w, h):
+                    return jnp.sum(binpack_fitness_ref(w, h, modes), axis=1)
+        else:
+            raise ValueError(
+                f"unknown backend {backend!r}; options: auto, pallas, ref"
+            )
+        fn = _SHARD_CACHE[key] = row_shard(mesh, body)
+    args = (widths, heights) + ((kinds,) if hetero else ())
+    args, n = pad_rows(args, k)
+    return fn(*(jnp.asarray(a) for a in args))[:n]

@@ -44,6 +44,7 @@ def portfolio_step(
     old_k=None,
     new_k=None,
     kind_tables=None,
+    mesh=None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """One fused call: ``(W, H)`` population geometry (any leading shape,
     bins on the last axis) plus ``(R, T)`` touched-bin SA step geometry ->
@@ -55,6 +56,10 @@ def portfolio_step(
     kind lanes of BOTH halves (``kinds`` for the populations, ``old_k`` /
     ``new_k`` for the touched slots) plus the shared ``kind_tables`` —
     all-or-none, since a portfolio's islands share one problem.
+
+    ``mesh`` (a 1-D ``("prob",)`` sweep mesh) row-shards BOTH halves over
+    their leading axes via ``shard_map`` on the jax backends, bit-identically
+    (docs/DESIGN.md section 14); the ``"python"`` backend ignores it.
     """
     hetero = kind_tables is not None
     sides = (kinds is not None, old_k is not None, new_k is not None)
@@ -69,6 +74,11 @@ def portfolio_step(
         kind_tables = tuple((int(w), tuple(m)) for w, m in kind_tables)
     else:
         modes = tuple(modes)
+    if mesh is not None and backend in ("ref", "pallas"):
+        return _portfolio_step_sharded(
+            W, H, old_w, old_h, new_w, new_h, modes, backend, interpret,
+            kinds, old_k, new_k, kind_tables, mesh,
+        )
     if backend == "python":
         if hetero:
             per_bin = _bin_costs_kinds_numpy(W, H, kinds, kind_tables)
@@ -121,6 +131,83 @@ def portfolio_step(
     return (
         np.asarray(totals, dtype=np.float64),
         np.asarray(deltas, dtype=np.int64),
+    )
+
+
+_SHARD_CACHE: dict = {}
+
+
+def _portfolio_step_sharded(
+    W, H, old_w, old_h, new_w, new_h, modes, backend, interpret,
+    kinds, old_k, new_k, kind_tables, mesh,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Row-sharded fused step over the ``("prob",)`` mesh (PR 8).
+
+    The two halves carry different row counts (GA population stacks vs SA
+    touched-bin rows), so each pads to a mesh-size multiple independently;
+    one shard_map program still evaluates both.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.probshard import mesh_size, pad_rows, row_shard
+
+    k = mesh_size(mesh)
+    hetero = kind_tables is not None
+    if hetero:
+        key = (mesh, backend, interpret, kind_tables)
+    else:
+        key = (mesh, backend, interpret, modes)
+    fn = _SHARD_CACHE.get(key)
+    if fn is None:
+        if backend == "ref":
+            from .ref import portfolio_step_kinds_ref, portfolio_step_ref
+
+            if hetero:
+                def body(w, h, kk, ow, oh, ok, nw, nh, nk):
+                    return portfolio_step_kinds_ref(
+                        w, h, kk, ow, oh, ok, nw, nh, nk, kind_tables
+                    )
+            else:
+                def body(w, h, ow, oh, nw, nh):
+                    return portfolio_step_ref(w, h, ow, oh, nw, nh, modes)
+        else:
+            from .kernel import (
+                portfolio_step_kinds_pallas,
+                portfolio_step_pallas,
+            )
+
+            if hetero:
+                def body(w, h, kk, ow, oh, ok, nw, nh, nk):
+                    return portfolio_step_kinds_pallas(
+                        w, h, kk, ow, oh, ok, nw, nh, nk, kind_tables,
+                        interpret,
+                    )
+            else:
+                def body(w, h, ow, oh, nw, nh):
+                    return portfolio_step_pallas(
+                        w, h, ow, oh, nw, nh, modes, interpret
+                    )
+        fn = _SHARD_CACHE[key] = row_shard(mesh, body, n_outputs=2)
+    pop = (W, H) + ((kinds,) if hetero else ())
+    step = (
+        (old_w, old_h, old_k, new_w, new_h, new_k)
+        if hetero
+        else (old_w, old_h, new_w, new_h)
+    )
+    pop, n_pop = pad_rows(pop, k)
+    step, n_step = pad_rows(step, k)
+    if hetero:
+        w, h, kk = pop
+        ow, oh, ok, nw, nh, nk = step
+        args = (w, h, kk, ow, oh, ok, nw, nh, nk)
+    else:
+        w, h = pop
+        ow, oh, nw, nh = step
+        args = (w, h, ow, oh, nw, nh)
+    totals, deltas = fn(*(jnp.asarray(a) for a in args))
+    return (
+        np.asarray(totals[:n_pop], dtype=np.float64),
+        np.asarray(deltas[:n_step], dtype=np.int64),
     )
 
 

@@ -60,6 +60,7 @@ def sa_step_deltas(
     old_k=None,
     new_k=None,
     kind_tables=None,
+    mesh=None,
 ) -> np.ndarray:
     """(C, T) touched-bin geometry before/after -> (C,) int64 cost deltas.
 
@@ -75,6 +76,13 @@ def sa_step_deltas(
     fleet of padded problems' chain blocks (the DSE sweep path —
     docs/DESIGN.md section 10).  Padded problems are masked by the same
     zero-width convention as padded slots.
+
+    ``mesh`` (a 1-D ``("prob",)`` mesh from ``launch.mesh.make_sweep_mesh``)
+    row-shards the jax backends via ``shard_map``: rows zero-pad to a
+    multiple of the mesh size and each device costs its contiguous block,
+    bit-identically (exact integers — docs/DESIGN.md section 14).  The
+    ``"python"`` backend is host numpy — single-device by nature — so it
+    ignores ``mesh``.
     """
     if backend == "auto":
         backend, interpret = resolve_auto()
@@ -85,6 +93,7 @@ def sa_step_deltas(
             flat(old_w), flat(old_h), flat(new_w), flat(new_h),
             modes=modes, backend=backend, interpret=interpret,
             old_k=flat(old_k), new_k=flat(new_k), kind_tables=kind_tables,
+            mesh=mesh,
         )
         return out.reshape(np_, c_)
     hetero = old_k is not None
@@ -92,6 +101,11 @@ def sa_step_deltas(
         if new_k is None or kind_tables is None:
             raise ValueError("old_k/new_k/kind_tables must be passed together")
         kind_tables = tuple((int(w), tuple(m)) for w, m in kind_tables)
+    if mesh is not None and backend in ("ref", "pallas"):
+        return _sa_step_deltas_sharded(
+            old_w, old_h, new_w, new_h, modes, backend, interpret,
+            old_k, new_k, kind_tables, mesh,
+        )
     if backend == "python":
         if hetero:
             new_c = _bin_costs_kinds_numpy(new_w, new_h, new_k, kind_tables)
@@ -133,6 +147,64 @@ def sa_step_deltas(
     else:
         raise ValueError(f"unknown backend {backend!r}; options: {BACKENDS}")
     return np.asarray(out, dtype=np.int64)
+
+
+_SHARD_CACHE: dict = {}
+
+
+def _sa_step_deltas_sharded(
+    old_w, old_h, new_w, new_h, modes, backend, interpret,
+    old_k, new_k, kind_tables, mesh,
+) -> np.ndarray:
+    """Row-sharded delta evaluation over the ``("prob",)`` mesh (PR 8)."""
+    import jax.numpy as jnp
+
+    from repro.kernels.probshard import mesh_size, pad_rows, row_shard
+
+    k = mesh_size(mesh)
+    hetero = old_k is not None
+    if hetero:
+        key = (mesh, backend, interpret, kind_tables)
+    else:
+        modes = tuple(modes)
+        key = (mesh, backend, interpret, modes)
+    fn = _SHARD_CACHE.get(key)
+    if fn is None:
+        if backend == "ref":
+            from .ref import sa_step_deltas_kinds_ref, sa_step_deltas_ref
+
+            if hetero:
+                def body(ow, oh, ok, nw, nh, nk):
+                    return sa_step_deltas_kinds_ref(
+                        ow, oh, ok, nw, nh, nk, kind_tables
+                    )
+            else:
+                def body(ow, oh, nw, nh):
+                    return sa_step_deltas_ref(ow, oh, nw, nh, modes)
+        else:
+            from .kernel import (
+                sa_step_deltas_kinds_pallas,
+                sa_step_deltas_pallas,
+            )
+
+            if hetero:
+                def body(ow, oh, ok, nw, nh, nk):
+                    return sa_step_deltas_kinds_pallas(
+                        ow, oh, ok, nw, nh, nk, kind_tables, interpret
+                    )
+            else:
+                def body(ow, oh, nw, nh):
+                    return sa_step_deltas_pallas(
+                        ow, oh, nw, nh, modes, interpret
+                    )
+        fn = _SHARD_CACHE[key] = row_shard(mesh, body)
+    if hetero:
+        args = (old_w, old_h, old_k, new_w, new_h, new_k)
+    else:
+        args = (old_w, old_h, new_w, new_h)
+    args, n = pad_rows(args, k)
+    out = fn(*(jnp.asarray(a) for a in args))
+    return np.asarray(out[:n], dtype=np.int64)
 
 
 def metropolis_mask(d_e, temps, u) -> np.ndarray:

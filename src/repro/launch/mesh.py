@@ -27,7 +27,8 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
         raise RuntimeError(
             f"mesh {shape} needs {n} devices but only {len(devices)} present; "
             "run under XLA_FLAGS=--xla_force_host_platform_device_count=512 "
-            "(dryrun.py sets this automatically)"
+            "(dryrun.py sets this automatically), or use make_host_mesh() / "
+            "make_sweep_mesh(n) for CPU runs"
         )
     return jax.make_mesh(shape, axes, devices=devices[:n])
 
@@ -35,3 +36,27 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 def make_host_mesh() -> jax.sharding.Mesh:
     """1-device mesh for CPU smoke tests and examples."""
     return jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
+
+
+def make_sweep_mesh(n_devices: int | None = None) -> jax.sharding.Mesh:
+    """1-D ``("prob",)`` mesh sharding the fleet's problem axis (PR 8).
+
+    The sweep/portfolio fleet (docs/DESIGN.md section 14) is a problem-major
+    array program; its only shardable axis is the leading problem axis, so
+    the sweep mesh is one-dimensional.  ``n_devices=None`` takes every
+    visible device.  On a CPU host, multiple devices come from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    devices = jax.devices()
+    if n_devices is None:
+        n_devices = len(devices)
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    if len(devices) < n_devices:
+        raise RuntimeError(
+            f"sweep mesh needs {n_devices} devices but only {len(devices)} "
+            "present; run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_devices} "
+            "for host-platform sharding"
+        )
+    return jax.make_mesh((n_devices,), ("prob",), devices=devices[:n_devices])

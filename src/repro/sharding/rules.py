@@ -10,6 +10,12 @@ are legal and padded by XLA; the roofline notes where padding costs):
   the cache *sequence* dim shards over ``model`` (ring-style decode reads).
 * long_500k (batch=1): DP axes are idle for activations; caches/states shard
   over sequence/heads as available.
+* ``prob`` — the bin-packing sweep axis (1-D ``launch.mesh.make_sweep_mesh``
+  mesh): the fleet kernels' leading problem/row axis shards across devices,
+  everything else (mode tables, kind tables) is replicated.  This axis goes
+  through ``shard_map`` (not GSPMD), so callers pad the leading axis to a
+  multiple of the mesh size first — ``prob_axis_spec`` below is the spec
+  for those padded operands.
 """
 from __future__ import annotations
 
@@ -21,6 +27,12 @@ from repro.models.config import ModelConfig, ShapeConfig
 
 def dp_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def prob_axis_spec(ndim: int) -> P:
+    """Spec for a sweep-fleet operand: leading problem axis sharded over
+    ``prob``, every trailing axis replicated."""
+    return P("prob", *([None] * (ndim - 1)))
 
 
 def _dp_size(mesh: Mesh) -> int:

@@ -247,11 +247,23 @@ def test_sweep_dedup_and_cache():
     assert sw.n_solved == 2 and sw.cache_hits == 1
     assert sw.results[0] is sw.results[1]
     assert len(cache) == 2
+    # params counters split the dedup/cache sources (PR 8): the duplicate is
+    # a dedup hit (same fingerprint in one fleet), not a cache hit
+    assert sw.params["solved"] == 2
+    assert sw.params["dedup_hits"] == 1
+    assert sw.params["cache_hits"] == 0
+    assert sw.params["n_shards"] == 1
     # a second sweep over a superset is served entirely from the cache
     sw2 = c.pack_sweep([prob, other, clone], "sa-s", seed=0, n_chains=3,
                        cache=cache, **_SA_KW)
     assert sw2.n_solved == 0 and sw2.cache_hits == 3
     assert sw2.results[0].cost == sw.results[0].cost
+    # 2 unique tasks served from the cache, the clone collapsed by dedup
+    assert sw2.params["solved"] == 0
+    assert sw2.params["cache_hits"] == 2
+    assert sw2.params["dedup_hits"] == 1
+    assert (sw2.params["solved"] + sw2.params["cache_hits"]
+            + sw2.params["dedup_hits"]) == sw2.size
     # different seed or budget = different task = fresh solve
     sw3 = c.pack_sweep([prob], "sa-s", seed=1, n_chains=3, cache=cache,
                        **_SA_KW)
