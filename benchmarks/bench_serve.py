@@ -1,0 +1,115 @@
+"""Service-level load benchmark: sustained rps + tail latency, cold vs warm.
+
+Two passes of the same seeded Poisson/Zipf workload through one
+``PackingService`` over a fresh store dir:
+
+* **cold** — empty store, every unique task costs a solve (micro-batched
+  on the single-dispatch lane); arrivals are offered faster than the lane
+  can drain so the measured rps is the service's sustained capacity, not
+  the generator's;
+* **warm** — identical workload replayed, all answers from the in-memory
+  cache / result store.
+
+Emits ``serve_latency.csv`` (per-request records, both phases) and
+``benchmarks/out/BENCH_serve.json`` with rps, p50/p99, batch occupancy,
+the warm/cold throughput ratio, and a **hard bit-parity flag**: every
+unique task is replayed through standalone ``pack()`` and bit-compared —
+an assert, not a report field, in every mode.  The warm >= 10x cold
+throughput gate is asserted outside ``--smoke`` (smoke's workload is too
+small for a stable ratio, though in practice it clears 10x there too).
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import tempfile
+
+from repro.serve import (
+    PackingService,
+    make_problems,
+    make_workload,
+    run_traffic,
+    verify_parity,
+)
+
+from .common import OUT_DIR, emit
+
+# deterministic engines: iteration budgets drive termination (DESIGN.md §12)
+_KW = dict(backend="python", max_seconds=1e9, patience=10**9, n_chains=4)
+
+
+def run(quick: bool = False, smoke: bool = False) -> dict:
+    if smoke:
+        n_requests, n_problems, max_iterations = 24, 4, 60
+    elif quick:
+        n_requests, n_problems, max_iterations = 120, 8, 150
+    else:
+        n_requests, n_problems, max_iterations = 400, 16, 300
+
+    problems = make_problems(n_problems, seed=1, hetero=True)
+    workload = make_workload(
+        n_requests, n_problems, rate_hz=5000.0, zipf_a=1.2, n_seeds=2, seed=0,
+    )
+
+    async def drive(store_dir):
+        async with PackingService(
+            "sa-s", store_dir=store_dir, max_batch=8, max_wait_ms=5.0,
+            max_queue=64, max_iterations=max_iterations, **_KW,
+        ) as svc:
+            cold = await run_traffic(svc, problems, workload, concurrency=32)
+            cold_stats = svc.stats()
+            warm = await run_traffic(svc, problems, workload, concurrency=32)
+            warm_stats = svc.stats()
+            parity = verify_parity(svc, problems, workload)
+            return cold, cold_stats, warm, warm_stats, parity
+
+    with tempfile.TemporaryDirectory() as store_dir:
+        cold, cold_stats, warm, warm_stats, parity = asyncio.run(
+            drive(store_dir)
+        )
+
+    # warm pass counters = totals minus what the cold pass already consumed
+    warm_solved = warm_stats["solved"] - cold_stats["solved"]
+    ratio = warm["rps"] / cold["rps"] if cold["rps"] else 0.0
+
+    rows = [
+        [phase, r["i"], f'{r["arrival_s"]:.6f}', r["prob_idx"], r["seed"],
+         f'{r["latency_s"]:.6f}', r["cost"]]
+        for phase, out in (("cold", cold), ("warm", warm))
+        for r in out["records"]
+    ]
+    emit("serve_latency",
+         ["phase", "i", "arrival_s", "prob_idx", "seed", "latency_s", "cost"],
+         rows)
+
+    record = {
+        "bench": "serve",
+        "mode": "smoke" if smoke else ("quick" if quick else "full"),
+        "requests": n_requests,
+        "problems": n_problems,
+        "unique_tasks": parity["tasks"],
+        "max_iterations": max_iterations,
+        "cold": {"rps": cold["rps"], **cold["latency"]},
+        "warm": {"rps": warm["rps"], **warm["latency"]},
+        "warm_over_cold": ratio,
+        "warm_solved": warm_solved,
+        "batch_occupancy": cold_stats["batch_occupancy"],
+        "deadline_fallbacks": cold_stats["deadline_fallbacks"],
+        "hit_rate_total": warm_stats["hit_rate"],
+        "bit_parity": parity["parity"],
+    }
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    path = OUT_DIR / "BENCH_serve.json"
+    path.write_text(json.dumps(record, indent=2))
+    print(f"--- serve ({path})")
+    print(json.dumps(record, indent=2))
+
+    # hard gates: parity always; warm pass must be pure cache; throughput
+    # ratio outside smoke (tiny smoke runs are timing noise)
+    assert parity["parity"], f"serve bit-parity FAILED: {parity['mismatches']}"
+    assert warm_solved == 0, f"warm pass ran {warm_solved} solves"
+    if not smoke:
+        assert ratio >= 10.0, (
+            f"warm-cache throughput only {ratio:.1f}x cold (need >= 10x)"
+        )
+    return record

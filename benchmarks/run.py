@@ -17,8 +17,8 @@ import time
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="engine|hetero|sa|portfolio|dse|sweep_sharded|table3|"
-                         "table4|fig45|tpu|seqpack|kernels|roofline")
+                    help="engine|hetero|sa|portfolio|dse|sweep_sharded|serve|"
+                         "table3|table4|fig45|tpu|seqpack|kernels|roofline")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny problems, 1-2 iterations, no meaningful "
@@ -33,6 +33,7 @@ def main(argv=None) -> None:
         bench_kernels,
         bench_roofline,
         bench_seqpack,
+        bench_serve,
         bench_sweep_sharded,
         bench_table3,
         bench_table4,
@@ -72,6 +73,7 @@ def main(argv=None) -> None:
         "sweep_sharded": lambda: bench_sweep_sharded.run(
             quick=quick, smoke=smoke
         ),
+        "serve": lambda: bench_serve.run(quick=quick, smoke=smoke),
         "table3": lambda: bench_table3.run(
             accelerators=small, budgets=budgets, seeds=t3_seeds
         ),

@@ -7,7 +7,7 @@ bytes recovered.
 """
 import sys
 
-from repro.launch.serve import main
+from repro.launch.decode_demo import main
 
 if __name__ == "__main__":
     argv = sys.argv[1:] or [

@@ -1,1 +1,5 @@
-from .manager import CheckpointManager  # noqa: F401
+from .manager import (  # noqa: F401
+    CheckpointManager,
+    read_atomic_dir,
+    write_atomic_dir,
+)

@@ -40,6 +40,87 @@ logger = logging.getLogger(__name__)
 _BF16_SUFFIX = "::bf16"
 
 
+def write_atomic_dir(
+    final: str | Path,
+    flat: dict[str, np.ndarray],
+    manifest: dict,
+    *,
+    tmp: str | Path | None = None,
+    replace: bool = True,
+) -> bool:
+    """Publish ``{arrays.npz, manifest.json}`` atomically under ``final``.
+
+    The shared integrity convention of every durable artifact in this repo
+    (checkpoint steps, ``repro.serve`` result-store entries): arrays go to
+    ``arrays.npz``, the manifest is stamped with its sha256, both land in a
+    scratch dir that is ``os.rename``d into place — a crash mid-write can
+    leave a stray ``*.tmp*`` dir but never a half-written ``final``.
+
+    ``replace=False`` is the concurrent-writer contract: when ``final``
+    already exists (another writer won the publish race) the scratch dir is
+    discarded and ``False`` is returned — an existing entry is never
+    touched, let alone half-overwritten.  With ``replace=True`` (the
+    checkpoint-step behavior) an existing ``final`` is swapped out.
+    ``tmp`` overrides the scratch path; the default carries pid + random
+    bytes so concurrent writers cannot collide on it either.
+    """
+    final = Path(final)
+    if tmp is None:
+        tmp = final.with_name(
+            f"{final.name}.tmp-{os.getpid()}-{os.urandom(4).hex()}"
+        )
+    tmp = Path(tmp)
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    np.savez(tmp / "arrays.npz", **flat)
+    digest = hashlib.sha256((tmp / "arrays.npz").read_bytes()).hexdigest()
+    (tmp / "manifest.json").write_text(
+        json.dumps({**manifest, "sha256": digest}, indent=2)
+    )
+    if final.exists():
+        if not replace:
+            shutil.rmtree(tmp, ignore_errors=True)
+            return False
+        shutil.rmtree(final)
+    try:
+        os.rename(tmp, final)
+    except OSError:
+        if not replace and final.exists():
+            # lost the publish race between the exists() check and the
+            # rename: the other writer's entry stands, ours is discarded
+            shutil.rmtree(tmp, ignore_errors=True)
+            return False
+        raise
+    return True
+
+
+def read_atomic_dir(path: str | Path) -> tuple[dict[str, np.ndarray], dict]:
+    """Integrity-checked read of a :func:`write_atomic_dir` layout.
+
+    Returns ``(flat, manifest)`` with bf16 views restored.  Raises
+    ``IOError`` on a sha256 mismatch (and lets json/npz parse errors of a
+    torn or scribbled entry propagate) — callers wanting graceful
+    degradation catch and skip, as ``CheckpointManager.restore_latest_valid``
+    and ``repro.serve.ResultStore.get`` do.
+    """
+    path = Path(path)
+    manifest = json.loads((path / "manifest.json").read_text())
+    blob = (path / "arrays.npz").read_bytes()
+    if hashlib.sha256(blob).hexdigest() != manifest.get("sha256"):
+        raise IOError(f"checkpoint {path} failed integrity check")
+    flat: dict[str, np.ndarray] = {}
+    with np.load(path / "arrays.npz") as arrays:
+        for key in arrays.files:
+            if key.endswith(_BF16_SUFFIX):
+                flat[key[: -len(_BF16_SUFFIX)]] = arrays[key].view(
+                    jax.numpy.bfloat16
+                )
+            else:
+                flat[key] = arrays[key]
+    return flat, manifest
+
+
 def _flatten(tree) -> dict[str, np.ndarray]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = {}
@@ -117,24 +198,17 @@ class CheckpointManager:
             self._error = e
 
     def _write(self, step: int, flat: dict, extra: dict) -> None:
-        final = self.dir / f"step_{step:08d}"
-        tmp = self.dir / f"step_{step:08d}.tmp"
-        if tmp.exists():
-            shutil.rmtree(tmp)
-        tmp.mkdir(parents=True)
-        np.savez(tmp / "arrays.npz", **flat)
-        digest = hashlib.sha256((tmp / "arrays.npz").read_bytes()).hexdigest()
-        manifest = {
-            "step": step,
-            "sha256": digest,
-            "keys": sorted(flat.keys()),
-            "time": time.time(),
-            "extra": extra,
-        }
-        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
-        if final.exists():
-            shutil.rmtree(final)
-        os.rename(tmp, final)
+        write_atomic_dir(
+            self.dir / f"step_{step:08d}",
+            flat,
+            {
+                "step": step,
+                "keys": sorted(flat.keys()),
+                "time": time.time(),
+                "extra": extra,
+            },
+            tmp=self.dir / f"step_{step:08d}.tmp",
+        )
         self._gc()
 
     def _gc(self) -> None:
@@ -174,21 +248,7 @@ class CheckpointManager:
         sha256 mismatch — callers wanting graceful degradation go through
         :meth:`restore_latest_valid`.
         """
-        path = self.dir / f"step_{step:08d}"
-        manifest = json.loads((path / "manifest.json").read_text())
-        blob = (path / "arrays.npz").read_bytes()
-        if hashlib.sha256(blob).hexdigest() != manifest["sha256"]:
-            raise IOError(f"checkpoint {path} failed integrity check")
-        flat: dict[str, np.ndarray] = {}
-        with np.load(path / "arrays.npz") as arrays:
-            for key in arrays.files:
-                if key.endswith(_BF16_SUFFIX):
-                    flat[key[: -len(_BF16_SUFFIX)]] = arrays[key].view(
-                        jax.numpy.bfloat16
-                    )
-                else:
-                    flat[key] = arrays[key]
-        return flat, manifest
+        return read_atomic_dir(self.dir / f"step_{step:08d}")
 
     def restore(
         self, like, step: int | None = None, shardings=None

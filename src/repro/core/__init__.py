@@ -18,7 +18,7 @@ from .accelerators import (  # noqa: F401
     hyperparams,
 )
 from .api import ALGORITHMS, make_packer, pack, pack_sweep  # noqa: F401
-from .dse import SweepResult  # noqa: F401
+from .dse import SweepResult, solve_batch, task_key  # noqa: F401
 from .ga import GeneticPacker, buffer_swap, kind_reassign  # noqa: F401
 from .nfd import nfd_from_scratch, nfd_pack_order, nfd_repack  # noqa: F401
 from .portfolio import (  # noqa: F401

@@ -66,6 +66,45 @@ _SA_BATCHED = ("sa-s",)
 _GA_LOCKSTEP = ("ga-nfd", "ga-s")
 
 
+def normalize_hyper(algorithm: str, hyper: dict) -> dict:
+    """Apply the sweep-level hyperparameter defaults for ``algorithm``.
+
+    ``pack_sweep`` gives ``sa-s`` fleets ``n_chains=8`` unless told
+    otherwise; anything that derives task identities for sweep-solved work
+    (the serve layer's request keys, ``ResultStore`` entries) must normalize
+    the same way or identical requests would hash to different tasks.
+    """
+    out = dict(hyper)
+    if algorithm.lower() in _SA_BATCHED:
+        out.setdefault("n_chains", 8)
+    return out
+
+
+def task_key(
+    prob: PackingProblem,
+    algorithm: str,
+    seed: int,
+    intra_layer: bool = False,
+    backend: str = "auto",
+    max_seconds: float = 30.0,
+    hyper: dict | None = None,
+) -> tuple:
+    """Stable identity of one solve: everything that can change its answer.
+
+    Two requests with equal keys are interchangeable — same problem
+    fingerprint, algorithm, seed, and settings — so they may share one
+    result object (``pack_sweep`` dedups on this; ``repro.serve`` coalesces
+    in-flight duplicates and keys its persistent store on it).  Callers
+    passing ``hyper`` should run it through :func:`normalize_hyper` first
+    if they want keys comparable with ``pack_sweep``'s.
+    """
+    hkey = tuple(sorted((k, repr(v)) for k, v in (hyper or {}).items()))
+    return (
+        prob.fingerprint(), algorithm.lower(), int(seed), bool(intra_layer),
+        backend, float(max_seconds), hkey,
+    )
+
+
 # --------------------------------------------------------------- sweep result
 @dataclasses.dataclass
 class SweepResult:
@@ -157,10 +196,8 @@ class SweepResult:
 
 def _task_keys(problems, algorithm, seeds, intra_layer, backend,
                max_seconds, hyper) -> list[tuple]:
-    hkey = tuple(sorted((k, repr(v)) for k, v in hyper.items()))
     return [
-        (prob.fingerprint(), algorithm, int(s), bool(intra_layer), backend,
-         float(max_seconds), hkey)
+        task_key(prob, algorithm, s, intra_layer, backend, max_seconds, hyper)
         for prob, s in zip(problems, seeds)
     ]
 
@@ -420,6 +457,110 @@ def _solve_ga_groups(
     return out
 
 
+def _solve_positions(
+    todo, problems, seeds, algorithm, *, seed=0, max_seconds=30.0,
+    intra_layer=False, backend="auto", keys=None, ck=None, n_shards=1,
+    mesh=None, hyper=None,
+) -> tuple[dict[int, PackingResult], int]:
+    """Solve the given positions of ``problems`` through the right lane.
+
+    The shared lane dispatcher behind :func:`pack_sweep` (which feeds it
+    the deduplicated representatives) and :func:`solve_batch` (which feeds
+    it everything).  Returns ``({position: result}, n_groups)``.
+    """
+    from .api import make_packer, pack as _pack  # late: api re-exports us
+
+    hyper = hyper or {}
+    solved: dict[int, PackingResult] = {}
+    todo = sorted(todo)
+    if not todo:
+        return solved, 0
+    if algorithm in _SA_BATCHED or algorithm in _GA_LOCKSTEP:
+        packer = make_packer(
+            algorithm, seed=seed, max_seconds=max_seconds,
+            intra_layer=intra_layer, backend=backend, **hyper,
+        )
+        resolved = packer._resolve_backend()
+    else:
+        packer = resolved = None
+    if (
+        algorithm in _SA_BATCHED
+        and resolved != "legacy"
+        and packer.n_chains > 1
+    ):
+        groups = _group_by_cost_model(todo, problems)
+        solved = _solve_sa_groups(
+            packer, groups, problems, seeds, resolved, keys=keys, ck=ck,
+            n_shards=n_shards, mesh=mesh,
+        )
+    elif algorithm in _GA_LOCKSTEP and resolved in ("ref", "pallas"):
+        groups = _group_by_cost_model(todo, problems)
+        solved = _solve_ga_groups(
+            packer, groups, problems, seeds, resolved, keys=keys, ck=ck,
+            n_shards=n_shards, mesh=mesh,
+        )
+    else:
+        # serial fallback: scalar/legacy engines, heuristics, portfolio.
+        # Checkpoint granularity here is whole candidates: each finished
+        # solve is durable, an in-flight one restarts from scratch.
+        groups = [[i] for i in todo]
+        for i in todo:
+            solved[i] = _pack(
+                problems[i], algorithm, seed=seeds[i],
+                max_seconds=max_seconds, intra_layer=intra_layer,
+                backend=backend, **hyper,
+            )
+            if ck is not None:
+                ck.mark_done(keys[i], solved[i])
+                ck.save_progress()
+    return solved, len(groups)
+
+
+def solve_batch(
+    problems: Sequence[PackingProblem],
+    algorithm: str = "sa-s",
+    seed: int = 0,
+    seeds: Sequence[int] | None = None,
+    max_seconds: float = 30.0,
+    intra_layer: bool = False,
+    backend: str = "auto",
+    n_shards: int = 1,
+    mesh=None,
+    **hyper,
+) -> list[PackingResult]:
+    """Solve one micro-batch of problems as a single batched fleet.
+
+    The reusable single-batch entry point behind the serving layer
+    (``repro.serve.PackingService`` executes every flushed micro-batch
+    through this on its worker lane): no dedup, no caching, no
+    checkpointing — just the lane dispatch of :func:`pack_sweep` applied to
+    *every* position, returning one :class:`PackingResult` per problem in
+    order.  Callers should pre-group compatible problems with
+    :func:`repro.core.problem.batch_group_key` when they want exactly one
+    fleet per call; mixed batches still work (they split into one group per
+    cost model).  Results carry the same bit-parity guarantee as
+    ``pack_sweep``: each is identical to the standalone
+    ``pack(problems[i], algorithm, seed=seeds[i], ...)`` run.
+    """
+    problems = list(problems)
+    if not problems:
+        raise ValueError("solve_batch needs at least one problem")
+    algorithm = algorithm.lower()
+    if seeds is None:
+        seeds = [seed] * len(problems)
+    else:
+        seeds = [int(s) for s in seeds]
+        if len(seeds) != len(problems):
+            raise ValueError("seeds must align with problems")
+    hyper = normalize_hyper(algorithm, hyper)
+    solved, _ = _solve_positions(
+        range(len(problems)), problems, seeds, algorithm, seed=seed,
+        max_seconds=max_seconds, intra_layer=intra_layer, backend=backend,
+        n_shards=int(n_shards), mesh=mesh, hyper=hyper,
+    )
+    return [solved[i] for i in range(len(problems))]
+
+
 def pack_sweep(
     problems: Sequence[PackingProblem],
     algorithm: str = "sa-s",
@@ -487,8 +628,6 @@ def pack_sweep(
       to the mesh's devices.  Jax backends ("ref"/"pallas") only; the
       ``"python"`` backend and the serial fallback lane ignore both knobs.
     """
-    from .api import make_packer, pack as _pack  # late: api re-exports us
-
     problems = list(problems)
     if not problems:
         raise ValueError("pack_sweep needs at least one problem")
@@ -499,8 +638,7 @@ def pack_sweep(
         seeds = [int(s) for s in seeds]
         if len(seeds) != len(problems):
             raise ValueError("seeds must align with problems")
-    if algorithm in _SA_BATCHED:
-        hyper.setdefault("n_chains", 8)
+    hyper = normalize_hyper(algorithm, hyper)
     n_shards = int(n_shards)
     if n_shards < 1:
         raise ValueError("n_shards must be >= 1")
@@ -538,48 +676,12 @@ def pack_sweep(
     # --- lane dispatch for the unsolved representatives
     n_groups = 0
     if rep:
-        todo = sorted(rep.values())
-        solved: dict[int, PackingResult] = {}
-        if algorithm in _SA_BATCHED or algorithm in _GA_LOCKSTEP:
-            packer = make_packer(
-                algorithm, seed=seed, max_seconds=max_seconds,
-                intra_layer=intra_layer, backend=backend, **hyper,
-            )
-            resolved = packer._resolve_backend()
-        else:
-            packer = resolved = None
-        if (
-            algorithm in _SA_BATCHED
-            and resolved != "legacy"
-            and packer.n_chains > 1
-        ):
-            groups = _group_by_cost_model(todo, problems)
-            n_groups = len(groups)
-            solved = _solve_sa_groups(
-                packer, groups, problems, seeds, resolved, keys=keys, ck=ck,
-                n_shards=n_shards, mesh=mesh,
-            )
-        elif algorithm in _GA_LOCKSTEP and resolved in ("ref", "pallas"):
-            groups = _group_by_cost_model(todo, problems)
-            n_groups = len(groups)
-            solved = _solve_ga_groups(
-                packer, groups, problems, seeds, resolved, keys=keys, ck=ck,
-                n_shards=n_shards, mesh=mesh,
-            )
-        else:
-            # serial fallback: scalar/legacy engines, heuristics, portfolio.
-            # Checkpoint granularity here is whole candidates: each finished
-            # solve is durable, an in-flight one restarts from scratch.
-            n_groups = len(todo)
-            for i in todo:
-                solved[i] = _pack(
-                    problems[i], algorithm, seed=seeds[i],
-                    max_seconds=max_seconds, intra_layer=intra_layer,
-                    backend=backend, **hyper,
-                )
-                if ck is not None:
-                    ck.mark_done(keys[i], solved[i])
-                    ck.save_progress()
+        solved, n_groups = _solve_positions(
+            rep.values(), problems, seeds, algorithm, seed=seed,
+            max_seconds=max_seconds, intra_layer=intra_layer,
+            backend=backend, keys=keys, ck=ck, n_shards=n_shards, mesh=mesh,
+            hyper=hyper,
+        )
         for i, res in solved.items():
             results_by_key[keys[i]] = res
             if cache is not None:

@@ -1,4 +1,7 @@
-"""Batched serving driver: prefill a batch of prompts, decode N tokens.
+"""Batched decode demo: prefill a batch of prompts, decode N tokens.
+
+(Formerly ``launch/serve.py``; renamed so the name is free for the real
+packing service in ``repro.serve``.)
 
 ``--packed`` routes the weights through the paper's memory packer
 (PackedParameterStore): banks are planned with GA-NFD, materialized, and

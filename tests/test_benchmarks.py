@@ -64,6 +64,19 @@ def test_bench_portfolio_smoke():
     ]
 
 
+def test_bench_serve_smoke():
+    from benchmarks import bench_serve
+    from benchmarks.common import OUT_DIR
+
+    record = bench_serve.run(smoke=True)
+    # the hard gates already ran inside run(); pin the published record
+    assert record["bit_parity"] is True
+    assert record["warm_solved"] == 0
+    assert record["warm"]["rps"] > record["cold"]["rps"]
+    assert (OUT_DIR / "BENCH_serve.json").is_file()
+    assert (OUT_DIR / "serve_latency.csv").is_file()
+
+
 @pytest.mark.slow
 def test_bench_run_smoke_executes_every_module():
     """`python -m benchmarks.run --smoke` completes every bench entry point

@@ -1,0 +1,250 @@
+"""Service-level tests for packing-as-a-service (``repro.serve``).
+
+The load-bearing contract, inherited from the sweep core: every response
+— micro-batched, coalesced, memory-cached, or store-served — is
+bit-identical to standalone ``pack(problem, seed=s)`` with the service's
+solver settings.  Plus the operational semantics: in-flight duplicate
+coalescing, warm restarts over a persistent store dir, the deadline
+single-candidate fallback, bounded-queue backpressure, drain-on-shutdown,
+and the ``stats()`` surface.  Everything runs deterministic budgets
+(iteration-driven termination, wall caps out of reach) on the python
+backend so results are reproducible on any host.
+"""
+import asyncio
+
+import pytest
+
+import repro.core as c
+from repro.serve import (
+    MicroBatcher,
+    PackingService,
+    Request,
+    make_problems,
+    result_signature,
+)
+from repro.serve.stats import LatencyStats
+
+_KW = dict(backend="python", max_seconds=1e9, patience=10**9,
+           max_iterations=80, n_chains=3)
+
+PROBS = make_problems(4, seed=3, hetero=True, max_buffers=14)
+
+
+def _ref(prob, seed):
+    return c.pack(prob, "sa-s", seed=seed, **_KW)
+
+
+def _service(**kw):
+    merged = {**_KW, **kw}
+    return PackingService("sa-s", **merged)
+
+
+# ------------------------------------------------------------ bit parity
+def test_single_request_bit_identical_to_pack():
+    async def go():
+        async with _service() as svc:
+            return await svc.pack(PROBS[0], seed=7)
+
+    res = asyncio.run(go())
+    assert result_signature(res) == result_signature(_ref(PROBS[0], 7))
+
+
+def test_microbatched_mixed_fleet_bit_parity():
+    """Concurrent mixed requests ride shared micro-batches, yet every
+    response equals its standalone run — batching is execution shape."""
+    reqs = [(i, s) for i in range(len(PROBS)) for s in (0, 1)]
+
+    async def go():
+        async with _service(max_batch=4, max_wait_ms=20.0) as svc:
+            out = await asyncio.gather(
+                *(svc.pack(PROBS[i], seed=s) for i, s in reqs)
+            )
+            return out, svc.stats()
+
+    out, stats = asyncio.run(go())
+    for (i, s), res in zip(reqs, out):
+        assert result_signature(res) == result_signature(_ref(PROBS[i], s))
+    assert stats["solved"] == len(reqs)
+    assert stats["batches"] < len(reqs)  # real batching happened
+    assert stats["batch_occupancy"]["mean"] > 1.0
+
+
+# ------------------------------------------------- dedup: coalesce + caches
+def test_inflight_duplicates_coalesce_to_one_solve():
+    async def go():
+        async with _service() as svc:
+            out = await asyncio.gather(
+                *(svc.pack(PROBS[1], seed=5) for _ in range(6))
+            )
+            return out, svc.stats()
+
+    out, stats = asyncio.run(go())
+    assert stats["solved"] == 1
+    assert stats["coalesced"] == 5
+    ref_sig = result_signature(_ref(PROBS[1], 5))
+    assert all(result_signature(r) == ref_sig for r in out)
+
+
+def test_sequential_repeat_hits_memory_cache():
+    async def go():
+        async with _service() as svc:
+            a = await svc.pack(PROBS[2], seed=1)
+            b = await svc.pack(PROBS[2], seed=1)
+            return a, b, svc.stats()
+
+    a, b, stats = asyncio.run(go())
+    assert stats["solved"] == 1 and stats["cache_hits_mem"] == 1
+    assert result_signature(a) == result_signature(b)
+    assert stats["hit_rate"] == 0.5
+
+
+def test_store_warm_restart_bit_identical(tmp_path):
+    """A restarted service over the same store dir serves prior results
+    from disk — zero solver work, bit-identical answers."""
+    store = tmp_path / "store"
+
+    async def first():
+        async with _service(store_dir=store) as svc:
+            return await asyncio.gather(
+                *(svc.pack(p, seed=2) for p in PROBS)
+            )
+
+    async def second():
+        async with _service(store_dir=store) as svc:
+            out = await asyncio.gather(
+                *(svc.pack(p, seed=2) for p in PROBS)
+            )
+            return out, svc.stats()
+
+    cold = asyncio.run(first())
+    warm, stats = asyncio.run(second())
+    assert stats["solved"] == 0
+    assert stats["cache_hits_store"] == len(PROBS)
+    for a, b in zip(cold, warm):
+        assert result_signature(a) == result_signature(b)
+
+
+# ------------------------------------------------- degradation + lifecycle
+def test_deadline_skips_batching_window():
+    """With a 10 s batching window, a 1 ms deadline request cannot wait for
+    co-batchers: it flushes immediately, alone (single-candidate fallback)."""
+    async def go():
+        async with _service(max_wait_ms=10_000.0) as svc:
+            res = await asyncio.wait_for(
+                svc.pack(PROBS[0], seed=0, deadline_ms=1.0), timeout=30.0
+            )
+            return res, svc.stats()
+
+    res, stats = asyncio.run(go())
+    assert result_signature(res) == result_signature(_ref(PROBS[0], 0))
+    assert stats["deadline_fallbacks"] == 1
+    assert stats["batch_occupancy"]["counts"] == {"1": 1}
+
+
+def test_backpressure_bounded_queue_still_answers_everything():
+    reqs = [(i, s) for i in range(len(PROBS)) for s in range(3)]
+
+    async def go():
+        async with _service(max_queue=2, max_batch=2) as svc:
+            out = await asyncio.gather(
+                *(svc.pack(PROBS[i], seed=s) for i, s in reqs)
+            )
+            assert svc._queue.maxsize == 2
+            return out
+
+    out = asyncio.run(go())
+    for (i, s), res in zip(reqs, out):
+        assert result_signature(res) == result_signature(_ref(PROBS[i], s))
+
+
+def test_stop_drains_accepted_work():
+    async def go():
+        svc = _service()
+        tasks = [
+            asyncio.create_task(svc.pack(PROBS[i], seed=9))
+            for i in range(len(PROBS))
+        ]
+        await asyncio.sleep(0.01)  # let requests reach the queue
+        await svc.stop()
+        assert all(t.done() for t in tasks)
+        out = [t.result() for t in tasks]
+        with pytest.raises(RuntimeError):
+            await svc.pack(PROBS[0], seed=0)  # stopped: no new admissions
+        return out
+
+    out = asyncio.run(go())
+    for i, res in enumerate(out):
+        assert result_signature(res) == result_signature(_ref(PROBS[i], 9))
+
+
+def test_solver_error_propagates_to_clients():
+    async def go():
+        async with PackingService("no-such-algo", backend="python") as svc:
+            with pytest.raises(Exception):
+                await svc.pack(PROBS[0], seed=0)
+            return svc.stats()
+
+    stats = asyncio.run(go())
+    assert stats["inflight"] == 0  # failed request cleaned up
+
+
+def test_stats_surface_shape():
+    async def go():
+        async with _service() as svc:
+            await svc.pack(PROBS[0], seed=0)
+            return svc.stats()
+
+    stats = asyncio.run(go())
+    for key in ("requests", "coalesced", "cache_hits_mem",
+                "cache_hits_store", "hit_rate", "solved", "batches",
+                "deadline_fallbacks", "queue_depth", "pending", "inflight",
+                "batch_occupancy", "latency_cached", "latency_solved"):
+        assert key in stats, key
+    assert stats["latency_solved"]["count"] == 1
+    assert stats["latency_solved"]["p99_s"] >= stats["latency_solved"]["p50_s"] >= 0
+    assert sum(
+        int(v) for v in stats["batch_occupancy"]["counts"].values()
+    ) == stats["batches"]
+
+
+# --------------------------------------------------- micro-batcher policy
+def _req(group, deadline_at=None):
+    return Request(prob=None, seed=0, key=(), group=group, future=None,
+                   arrival=0.0, flush_at=0.0, deadline_at=deadline_at)
+
+
+def test_batcher_size_flush_is_immediate():
+    b = MicroBatcher(max_batch=2, max_wait_ms=1e6)
+    b.admit(_req("g"), now=0.0)
+    assert b.pop_ready(0.0) == []
+    b.admit(_req("g"), now=0.0)
+    (batch,) = b.pop_ready(0.0)
+    assert len(batch) == 2 and b.pending() == 0
+
+
+def test_batcher_age_flush_and_group_separation():
+    b = MicroBatcher(max_batch=8, max_wait_ms=1000.0)
+    b.admit(_req("g1"), now=0.0)
+    b.admit(_req("g2"), now=0.5)
+    assert b.pop_ready(0.9) == []  # neither window closed
+    assert b.next_flush_at() == pytest.approx(1.0)
+    batches = b.pop_ready(1.0)  # g1's window closes; g2 keeps waiting
+    assert [r.group for bt in batches for r in bt] == ["g1"]
+    assert b.pending() == 1
+
+
+def test_batcher_deadline_rush():
+    b = MicroBatcher(max_batch=8, max_wait_ms=1000.0)
+    b.admit(_req("g", deadline_at=0.01), now=0.0)
+    (batch,) = b.pop_ready(0.0)  # due immediately, alone
+    assert len(batch) == 1 and batch[0].deadline_rushed
+
+
+def test_latency_stats_percentiles():
+    ls = LatencyStats()
+    for v in range(1, 101):
+        ls.record(float(v))
+    assert ls.count == 100
+    assert ls.percentile(0.50) == pytest.approx(50.0, abs=1.0)
+    assert ls.percentile(0.99) == pytest.approx(99.0, abs=1.0)
+    assert ls.mean == pytest.approx(50.5)

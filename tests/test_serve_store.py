@@ -1,0 +1,142 @@
+"""Fault-injection tests for the service's persistent ``ResultStore``.
+
+Reuses the ``tests/faultinject.py`` disk corruptors unchanged — a store
+entry dir has the same ``{arrays.npz, manifest.json}`` layout as a
+checkpoint step, so the same torn/corrupted/half-deleted damage applies.
+The contract under damage mirrors ``restore_latest_valid``: a damaged
+entry is **skipped with a logged warning and never served**; the caller
+recomputes and the recompute's ``put`` repairs the entry on disk.  The
+concurrent-writer contract is the atomic-rename one: a losing writer
+never touches the winning entry, not even transiently.
+"""
+import json
+
+import pytest
+
+import repro.core as c
+from faultinject import (
+    corrupt_arrays,
+    corrupt_manifest,
+    half_delete,
+    tear_arrays,
+)
+from repro.core.dse import task_key
+from repro.serve import ResultStore, make_problems, result_signature
+
+_KW = dict(backend="python", max_seconds=1e9, patience=10**9,
+           max_iterations=60, n_chains=2)
+
+PROB = make_problems(1, seed=11, hetero=True, max_buffers=12)[0]
+
+
+def _solve(seed=0):
+    return c.pack(PROB, "sa-s", seed=seed, **_KW)
+
+
+def _key(seed=0):
+    return task_key(PROB, "sa-s", seed, backend="python",
+                    max_seconds=1e9,
+                    hyper=dict(patience=10**9, max_iterations=60, n_chains=2))
+
+
+def test_round_trip_bit_identical(tmp_path):
+    store = ResultStore(tmp_path, memory_cache=False)
+    res = _solve()
+    assert store.put(_key(), res)
+    assert _key() in store and len(store) == 1
+    got = store.get(_key(), PROB)
+    assert result_signature(got) == result_signature(res)
+    # full metadata survives too, not just the packing
+    assert got.algorithm == res.algorithm
+    assert got.iterations == res.iterations
+    assert got.params == res.params
+
+
+def test_fresh_store_over_same_dir_serves_warm(tmp_path):
+    """The killed-server model: writer process gone, a brand-new store over
+    the same dir serves its results from disk."""
+    ResultStore(tmp_path).put(_key(), _solve())
+    reborn = ResultStore(tmp_path, memory_cache=False)
+    got = reborn.get(_key(), PROB)
+    assert result_signature(got) == result_signature(_solve())
+    assert reborn.hits == 1 and reborn.corrupt_skipped == 0
+
+
+@pytest.mark.parametrize(
+    "corruptor", [tear_arrays, corrupt_arrays, corrupt_manifest, half_delete]
+)
+def test_damaged_entry_skipped_then_repaired(tmp_path, corruptor, caplog):
+    store = ResultStore(tmp_path, memory_cache=False)
+    res = _solve()
+    store.put(_key(), res)
+    corruptor(store.path_for(_key()))
+
+    with caplog.at_level("WARNING", logger="repro.serve.store"):
+        assert store.get(_key(), PROB) is None  # never served damaged
+    assert store.corrupt_skipped == 1
+    assert any("corrupt" in r.message for r in caplog.records)
+
+    # the recompute path: put() swaps the damaged entry for a fresh one
+    assert store.put(_key(), res)
+    store2 = ResultStore(tmp_path, memory_cache=False)
+    assert result_signature(store2.get(_key(), PROB)) == result_signature(res)
+
+
+def test_wrong_key_digest_never_served(tmp_path):
+    """An entry renamed over another task's slot fails the digest check."""
+    store = ResultStore(tmp_path, memory_cache=False)
+    store.put(_key(0), _solve(0))
+    path0 = store.path_for(_key(0))
+    path1 = store.path_for(_key(1))
+    path0.rename(path1)  # files intact, identity wrong
+    assert store.get(_key(1), PROB) is None
+    assert store.corrupt_skipped == 1
+
+
+def test_concurrent_second_writer_never_corrupts(tmp_path):
+    """Atomic-rename contract: a losing writer leaves the winner untouched
+    (same bytes before and after) and reports the lost race."""
+    store_a = ResultStore(tmp_path, memory_cache=False)
+    store_b = ResultStore(tmp_path, memory_cache=False)
+    res = _solve()
+    assert store_a.put(_key(), res)
+    entry = store_a.path_for(_key())
+    before = {
+        f.name: f.read_bytes() for f in entry.iterdir() if f.is_file()
+    }
+
+    assert store_b.put(_key(), res) is False  # lost the race
+    assert store_b.lost_races == 1
+    after = {
+        f.name: f.read_bytes() for f in entry.iterdir() if f.is_file()
+    }
+    assert after == before  # bit-for-bit untouched
+    assert not list(tmp_path.glob("*.tmp*"))  # scratch dirs cleaned up
+
+    got = store_b.get(_key(), PROB)
+    assert result_signature(got) == result_signature(res)
+
+
+def test_torn_tmp_dir_is_invisible(tmp_path):
+    """A crash mid-write leaves only a scratch dir: not an entry, not
+    counted, not served."""
+    store = ResultStore(tmp_path, memory_cache=False)
+    junk = tmp_path / f"entry_deadbeef.tmp-999-aa"
+    junk.mkdir()
+    (junk / "arrays.npz").write_bytes(b"partial")
+    assert len(store) == 0
+    assert store.digests() == []
+
+
+def test_manifest_is_valid_json_with_sha(tmp_path):
+    """Entry layout contract: manifest carries format, task digest, and the
+    sha256 the corruptors/readers verify against."""
+    store = ResultStore(tmp_path, memory_cache=False)
+    store.put(_key(), _solve())
+    manifest = json.loads(
+        (store.path_for(_key()) / "manifest.json").read_text()
+    )
+    assert manifest["format"] == 1
+    assert manifest["digest"] in store.path_for(_key()).name
+    assert len(manifest["sha256"]) == 64
+    assert "wall_time_s" in manifest["result"]
