@@ -1,11 +1,13 @@
 """Paper Figs. 4/5: GA-NFD population-size study on ResNet-50."""
 from __future__ import annotations
 
+import json
+
 import numpy as np
 
 import repro.core as c
 
-from .common import emit
+from .common import OUT_DIR, emit
 
 POPS = (5, 25, 50, 150)
 
@@ -28,4 +30,11 @@ def run(budget_s: float = 25.0, seeds=(0, 1)):
              round(float(np.mean(times)), 2)]
         )
     emit("fig45_population_size", header, rows)
+    record = {
+        "accelerator": "RN50-W1A2",
+        "budget_s": budget_s,
+        "seeds": list(seeds),
+        "rows": [dict(zip(header, row)) for row in rows],
+    }
+    (OUT_DIR / "BENCH_fig45.json").write_text(json.dumps(record, indent=2))
     return rows

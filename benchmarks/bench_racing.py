@@ -1,0 +1,90 @@
+"""Self-tuning portfolio deliverable: auto racing vs the default lineup.
+
+Runs ``pack_portfolio(auto=True)`` (successive-halving over an SA config
+grid) against the default same-size lineup at EQUAL total iteration
+budget — the race ledger is left at its default, which anchors it to
+exactly the work the default lineup consumes, and the SA-only lineups
+keep the ledger in raw chain-step units so "equal" is exact, not
+work-unit-approximate.  Everything is iteration-budgeted and
+``backend="python"`` so the numbers are machine-independent.
+
+Emits ``BENCH_racing.json`` with the hard flag ``auto_cost_le_default``;
+outside smoke mode the flag is asserted — the bench FAILS if the
+self-tuned portfolio loses to the lineup it replaces on any accelerator.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import repro.core as c
+
+from .common import OUT_DIR, emit
+
+# chain counts held equal so every config costs the same per barrier and
+# the ledger stays in raw chain-step units; the race tunes the ladder and
+# temperature schedule
+GRID = (
+    ("sa-s", {"n_chains": 4}),
+    ("sa-s", {"n_chains": 4, "ladder_max": 8.0}),
+    ("sa-s", {"n_chains": 4, "sa_t0": 60.0, "sa_rc": 0.5}),
+    ("sa-s", {"n_chains": 4, "sa_t0": 10.0, "sa_rc": 2.0}),
+)
+
+
+def run(quick: bool = False, smoke: bool = False):
+    if smoke:
+        accels, iters = ["CNV-W1A1"], 64
+    elif quick:
+        accels, iters = ["CNV-W1A1", "CNV-W2A2"], 512
+    else:
+        accels, iters = ["CNV-W1A1", "CNV-W2A2", "Tincy-YOLO", "RN50-W1A2"], 2048
+
+    kw = dict(
+        seed=0, backend="python", max_seconds=1e9, patience=10**9,
+        migration_every=32, sa_chains=4, n_islands=4, algorithms=("sa-s",),
+        max_iterations=iters,
+    )
+    header = ["accelerator", "budget", "spent", "auto_cost", "default_cost",
+              "auto_iters", "default_iters", "auto_s", "default_s"]
+    rows, details = [], []
+    for name in accels:
+        prob = c.get_problem(name)
+        t0 = time.perf_counter()
+        auto = c.pack_portfolio(prob, auto=True, race_grid=list(GRID), **kw)
+        t_auto = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        default = c.pack_portfolio(prob, **kw)
+        t_default = time.perf_counter() - t0
+        race = auto.params["race"]
+        assert race["spent"] <= race["budget"], name  # ledger is a hard cap
+        rows.append([
+            name, race["budget"], race["spent"], auto.cost, default.cost,
+            auto.iterations, default.iterations,
+            round(t_auto, 2), round(t_default, 2),
+        ])
+        details.append({
+            "accelerator": name,
+            "budget": race["budget"],
+            "spent": race["spent"],
+            "auto_cost": auto.cost,
+            "default_cost": default.cost,
+            "auto_iterations": auto.iterations,
+            "default_iterations": default.iterations,
+            "survivors": race["survivors"],
+            "eliminated": race["eliminated"],
+        })
+    emit("racing_auto_vs_default", header, rows)
+    flag = all(d["auto_cost"] <= d["default_cost"] for d in details)
+    record = {
+        "mode": "smoke" if smoke else ("quick" if quick else "full"),
+        "max_iterations": iters,
+        "grid": [[a, h] for a, h in GRID],
+        "results": details,
+        "auto_cost_le_default": flag,
+    }
+    (OUT_DIR / "BENCH_racing.json").write_text(json.dumps(record, indent=2))
+    if not smoke:
+        # the deliverable, enforced: auto-tuning must not lose at equal budget
+        assert flag, f"auto lost to the default lineup: {details}"
+    return rows

@@ -17,8 +17,9 @@ import time
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="engine|hetero|sa|portfolio|dse|sweep_sharded|serve|"
-                         "table3|table4|fig45|tpu|seqpack|kernels|roofline")
+                    help="engine|hetero|sa|portfolio|racing|dse|sweep_sharded|"
+                         "serve|table3|table4|fig45|tpu|seqpack|kernels|"
+                         "roofline")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny problems, 1-2 iterations, no meaningful "
@@ -31,6 +32,7 @@ def main(argv=None) -> None:
         bench_engine,
         bench_fig45,
         bench_kernels,
+        bench_racing,
         bench_roofline,
         bench_seqpack,
         bench_serve,
@@ -69,6 +71,7 @@ def main(argv=None) -> None:
         "hetero": lambda: bench_engine.run_hetero(quick=quick, smoke=smoke),
         "sa": lambda: bench_engine.run_sa(quick=quick, smoke=smoke),
         "portfolio": lambda: bench_engine.run_portfolio(quick=quick, smoke=smoke),
+        "racing": lambda: bench_racing.run(quick=quick, smoke=smoke),
         "dse": lambda: bench_dse.run(quick=quick, smoke=smoke),
         "sweep_sharded": lambda: bench_sweep_sharded.run(
             quick=quick, smoke=smoke

@@ -22,7 +22,9 @@ from .dse import SweepResult, solve_batch, task_key  # noqa: F401
 from .ga import GeneticPacker, buffer_swap, kind_reassign  # noqa: F401
 from .nfd import nfd_from_scratch, nfd_pack_order, nfd_repack  # noqa: F401
 from .portfolio import (  # noqa: F401
+    DEFAULT_RACE_GRID,
     IslandSpec,
+    TruncationWarning,
     pack_portfolio,
     pack_portfolio_threads,
 )

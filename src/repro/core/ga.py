@@ -619,6 +619,24 @@ class GeneticPacker:
             run.best = mig.copy()
         return True
 
+    # ------------------------------------------------- portfolio racing hooks
+    def _extend_run(self, run: "_GARun", gen_limit: int) -> None:
+        """Racing budget reallocation: raise this run's generation budget to
+        at least ``gen_limit``, reviving a run that stopped *on budget*
+        (never one converged on patience or cut by the wall cap) — the GA
+        half of the ledger contract in ``portfolio.pack_portfolio(auto=True)``.
+        """
+        if run.done and run.stale < self.patience and run.gen >= self.max_generations:
+            run.done = False
+        self.max_generations = max(self.max_generations, int(gen_limit))
+
+    def _eliminate_run(self, run: "_GARun") -> None:
+        """Racing elimination: stop this run forever.  ``lockstep_begin``
+        skips done runs before any mutation draw, so the lockstep pack's
+        surviving runs consume exactly the RNG streams they would have
+        without this island."""
+        run.done = True
+
     def pack(
         self, prob: PackingProblem, init_pop: Sequence[Solution] | None = None
     ) -> PackingResult:

@@ -89,9 +89,48 @@ DEFAULT_MIGRATION_EVERY = 64
 _SCALAR_STRIDE_DIV = 4
 _GA_STRIDE_DIV = 32
 
+# Racing ledger currency (``pack_portfolio(auto=True)``): one unit is one
+# chain-annealing step.  A fleet island burns ``stride * n_chains`` units per
+# barrier, a scalar/single-chain island ``stride``, and a GA island
+# ``stride * n_pop * _GA_GEN_WORK`` — one generation mutates and re-evaluates
+# on the order of ``n_pop`` individuals, and the stride design above prices a
+# default generation (n_pop=50) at ``_GA_STRIDE_DIV`` fleet steps of
+# ``sa_chains=8`` chains, i.e. 32*8/50 ~ 5 chain-steps per individual.  The
+# weights are static functions of the lineup, so the ledger — and with it
+# every elimination decision — is machine-independent.
+_GA_GEN_WORK = 5
+
+# Default race grid for ``pack_portfolio(auto=True)``: the hyperparameter
+# axes the paper shows the mappers are sensitive to — GA population size and
+# mutation rate (Fig. 4/5, reproduced in ``benchmarks/bench_fig45.py``), SA
+# chain counts, temperature ladders, and move widths (Table 2 neighborhood).
+# Entries are ``(algorithm, hyper-overrides)``; island k races with seed
+# ``seed + k``.
+DEFAULT_RACE_GRID = (
+    ("sa-s", {}),
+    ("sa-s", {"n_chains": 16, "ladder_max": 8.0}),
+    ("sa-s", {"n_chains": 4, "ladder_min": 0.25, "ladder_max": 1.0}),
+    ("sa-s", {"sa_t0": 60.0, "sa_rc": 0.5}),
+    ("sa-s", {"sa_t0": 10.0, "sa_rc": 2.0}),
+    ("sa-s", {"swap_moves": 4}),
+    ("ga-nfd", {}),
+    ("ga-nfd", {"n_pop": 25, "p_mut": 0.6}),
+    ("ga-nfd", {"n_pop": 150}),
+    ("ga-nfd", {"n_pop": 5, "p_mut": 0.8}),
+    ("ga-s", {"n_pop": 25}),
+    ("sa-nfd", {}),
+)
+
 # offset between per-round reseeds of the legacy thread-pool portfolio; any
 # large odd constant keeps island streams disjoint from the base seeds
 _ROUND_SEED_STRIDE = 7919
+
+
+class TruncationWarning(RuntimeWarning):
+    """A wall-clock cap cut a run short of its iteration/patience budgets —
+    the result is NOT seed-reproducible across machines.  Promoted to an
+    error in the test suite (``pytest.ini``); tests that intentionally
+    exercise the truncation path catch it with ``pytest.warns``."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -186,10 +225,20 @@ class _FleetIsland:
         self.group = group
         self.j = j
         self.packer = group.packer
+        self.eliminated = False
 
     def done(self) -> bool:
         st, j = self.group.state_of(self.j)
         return st.done or self.packer._block_frozen(st, j)
+
+    def extend(self, it_limit: int) -> None:
+        st, _ = self.group.state_of(self.j)
+        self.packer._block_extend(st, it_limit)
+
+    def eliminate(self) -> None:
+        st, j = self.group.state_of(self.j)
+        self.packer._block_eliminate(st, j)
+        self.eliminated = True
 
     def raw(self) -> tuple[int, int]:
         st, j = self.group.state_of(self.j)
@@ -228,6 +277,8 @@ class _FleetIsland:
     def truncated(self) -> bool:
         """True iff the fleet stopped on the wall-clock cap — done, but
         neither frozen (patience) nor out of iteration budget."""
+        if self.eliminated:
+            return False
         st, _ = self.group.state_of(self.j)
         return st.done and not st.frozen and st.it < self.packer.max_iterations
 
@@ -253,11 +304,19 @@ class _GAIsland:
     def __init__(self, packer: GeneticPacker, run):
         self.packer = packer
         self.run = run
+        self.eliminated = False
 
     def done(self) -> bool:
         # exhausted patience counts as done even before the next lockstep
         # call marks it (mirrors _ScalarIsland: no migrants for converged runs)
         return self.run.done or self.run.stale >= self.packer.patience
+
+    def extend(self, gen_limit: int) -> None:
+        self.packer._extend_run(self.run, gen_limit)
+
+    def eliminate(self) -> None:
+        self.packer._eliminate_run(self.run)
+        self.eliminated = True
 
     def raw(self) -> tuple[int, int]:
         cost = int(self.run.best_cost)
@@ -281,7 +340,8 @@ class _GAIsland:
 
     def truncated(self) -> bool:
         return (
-            self.run.done
+            not self.eliminated
+            and self.run.done
             and self.run.gen < self.packer.max_generations
             and self.run.stale < self.packer.patience
         )
@@ -294,6 +354,18 @@ class _ScalarIsland:
         self.packer = packer
         self.st = st
         self.single = single
+        self.eliminated = False
+
+    def extend(self, it_limit: int) -> None:
+        hook = (
+            self.packer._single_extend if self.single
+            else self.packer._scalar_extend
+        )
+        hook(self.st, it_limit)
+
+    def eliminate(self) -> None:
+        self.packer._loop_eliminate(self.st)
+        self.eliminated = True
 
     def advance(self, limit: int | None) -> bool:
         if self.st.done:
@@ -330,7 +402,8 @@ class _ScalarIsland:
 
     def truncated(self) -> bool:
         return (
-            self.st.done
+            not self.eliminated
+            and self.st.done
             and self.st.it < self.packer.max_iterations
             and self.st.stale < self.packer.patience
         )
@@ -364,19 +437,176 @@ def _sa_fleet_key(packer: SimulatedAnnealingPacker, resolved: str) -> tuple:
     )
 
 
-def _group_stride(group, interval: int, ga_islands: int) -> int:
+def _family_stride(family: str, interval: int, ga_islands: int) -> int:
     """Barrier stride (iterations/generations per barrier) of one engine
-    group on a heterogeneous lineup — see `_GA_STRIDE_DIV` above.
-    ``ga_islands`` (the lineup's GA island count) scales the SA strides so
-    the delta-kernel engines keep annealing for roughly the wall time one
-    stacked GA generation takes, instead of idling at the barrier."""
-    if isinstance(group, _GAGroup):
+    family — ``"ga"``, ``"scalar"`` (sa-nfd's sequential repack / the
+    legacy backend), or ``"delta"`` (fleet and single-chain sa-s) — on a
+    heterogeneous lineup; see `_GA_STRIDE_DIV` above.  ``ga_islands`` (the
+    lineup's GA island count) scales the SA strides so the delta-kernel
+    engines keep annealing for roughly the wall time one stacked GA
+    generation takes, instead of idling at the barrier."""
+    if family == "ga":
         return max(1, interval // _GA_STRIDE_DIV)
     mult = max(1, ga_islands)
-    if isinstance(group, _ScalarIsland) and not group.single:
+    if family == "scalar":
         return max(1, interval // _SCALAR_STRIDE_DIV) * mult
-    # SA fleet + single-chain sa-s: the delta-kernel engines
     return interval * mult
+
+
+def _group_stride(group, interval: int, ga_islands: int) -> int:
+    """`_family_stride` of one built engine group."""
+    if isinstance(group, _GAGroup):
+        family = "ga"
+    elif isinstance(group, _ScalarIsland) and not group.single:
+        family = "scalar"
+    else:
+        family = "delta"
+    return _family_stride(family, interval, ga_islands)
+
+
+def _island_family(packer, resolved: str) -> str:
+    """The `_family_stride` family a packer's island lands in."""
+    if isinstance(packer, GeneticPacker):
+        return "ga"
+    if packer.perturbation == "nfd" or resolved == "legacy":
+        return "scalar"
+    return "delta"
+
+
+def _island_work(packer, family: str, stride: int) -> int:
+    """Ledger units (chain-annealing-step equivalents, see `_GA_GEN_WORK`)
+    one island burns per barrier."""
+    if family == "ga":
+        return stride * packer.n_pop * _GA_GEN_WORK
+    if family == "delta" and packer.n_chains > 1:
+        return stride * packer.n_chains
+    return stride
+
+
+def _lineup_work(packers, resolved, interval: int) -> int:
+    """Total ledger work the given lineup would consume running every
+    island to its configured iteration/generation budget (rounded up to
+    whole barriers) — the racing driver's "equal total budget" anchor:
+    ``pack_portfolio(auto=True)`` defaults its ledger to the default
+    lineup's `_lineup_work`, so auto-tuning never spends more than the
+    lineup it replaces."""
+    fams = [_island_family(p, r) for p, r in zip(packers, resolved)]
+    n_ga = fams.count("ga")
+    fleet_keys = {
+        _sa_fleet_key(p, r)
+        for p, r, f in zip(packers, resolved, fams)
+        if f == "delta" and p.n_chains > 1
+    }
+    # group count mirrors pack_portfolio's construction: one GA lockstep
+    # pack, one group per distinct fleet signature, one per scalar island
+    n_groups = (
+        (1 if n_ga else 0)
+        + len(fleet_keys)
+        + sum(1 for p, f in zip(packers, fams)
+              if f == "scalar" or (f == "delta" and p.n_chains == 1))
+    )
+    multi = n_groups > 1
+    seg = interval if interval > 0 else DEFAULT_MIGRATION_EVERY
+    total = 0
+    for p, f in zip(packers, fams):
+        s = _family_stride(f, seg, n_ga) if (multi and interval > 0) else seg
+        budget = p.max_generations if f == "ga" else p.max_iterations
+        barriers = -(-int(budget) // s)  # ceil: whole-barrier accounting
+        total += barriers * _island_work(p, f, s)
+    return total
+
+
+class _Race:
+    """Successive-halving race state over the portfolio's island adapters.
+
+    The ledger (``budget``, in `_island_work` units) is split evenly over
+    ``halvings + 1`` phases; each time a phase's share is spent the worse
+    half of the surviving islands is eliminated (penalized best cost,
+    first island wins ties) until ``final_k`` remain, and the rest of the
+    ledger — including everything the eliminated islands never ran — is
+    spent advancing the survivors further (docs/DESIGN.md section 16).
+    Every decision is a pure function of island trajectories and the
+    static work weights, so races are bit-reproducible and the state
+    round-trips through the portfolio checkpoint payload."""
+
+    def __init__(self, work: list[int], budget: int, final_k: int):
+        self.work = [int(w) for w in work]
+        self.budget = int(budget)
+        self.final_k = max(1, int(final_k))
+        n = len(work)
+        self.halvings = 0
+        s = n
+        while s > self.final_k:
+            s = max(self.final_k, (s + 1) // 2)
+            self.halvings += 1
+        self.phase_budget = max(1, self.budget // (self.halvings + 1))
+        self.alive = [True] * n
+        self.spent = 0
+        self.rung = 0
+        self.rung_spent = 0
+        self.eliminated: list[dict] = []
+
+    def live(self, adapters) -> list[int]:
+        """Islands still racing AND still able to advance (not frozen)."""
+        return [
+            k for k, isl in enumerate(adapters)
+            if self.alive[k] and not isl.done()
+        ]
+
+    def charge(self, live: list[int]) -> bool:
+        """Burn one barrier's work for ``live``; False when the ledger
+        cannot cover it (the race is over — never overspends)."""
+        cost = sum(self.work[k] for k in live)
+        if cost <= 0 or self.spent + cost > self.budget:
+            return False
+        self.spent += cost
+        self.rung_spent += cost
+        return True
+
+    def maybe_halve(self, adapters, barrier: int, lam: float) -> None:
+        """At a rung boundary (this phase's ledger share is spent), keep
+        the best half of the surviving islands and eliminate the rest."""
+        if self.rung >= self.halvings or self.rung_spent < self.phase_budget:
+            return
+        self.rung += 1
+        self.rung_spent = 0
+        racing = [k for k in range(len(adapters)) if self.alive[k]]
+        keep = max(self.final_k, (len(racing) + 1) // 2)
+        if keep >= len(racing):
+            return
+        vals = {
+            k: (lambda c, o: c + lam * o)(*adapters[k].raw()) for k in racing
+        }
+        ranked = sorted(racing, key=lambda k: (vals[k], k))
+        for k in ranked[keep:]:
+            self.alive[k] = False
+            adapters[k].eliminate()
+            self.eliminated.append(
+                {"island": k, "barrier": int(barrier), "value": float(vals[k])}
+            )
+
+    def state(self) -> dict:
+        """JSON-able snapshot payload (checkpoint codec)."""
+        return {
+            "budget": self.budget,
+            "spent": self.spent,
+            "rung": self.rung,
+            "rung_spent": self.rung_spent,
+            "eliminated": self.eliminated,
+        }
+
+    def restore(self, state: dict, adapters) -> None:
+        """Re-enter a checkpointed race: replay the recorded eliminations
+        onto the freshly restored adapters (idempotent — the engine states
+        in the snapshot are already frozen/stopped) and resume the ledger."""
+        self.spent = int(state["spent"])
+        self.rung = int(state["rung"])
+        self.rung_spent = int(state["rung_spent"])
+        self.eliminated = [dict(e) for e in state["eliminated"]]
+        for e in self.eliminated:
+            k = int(e["island"])
+            self.alive[k] = False
+            adapters[k].eliminate()
 
 
 def _group_label(group, i: int) -> str:
@@ -479,9 +709,39 @@ def pack_portfolio(
     on_checkpoint=None,
     n_shards: int = 1,
     mesh=None,
+    auto: bool = False,
+    race_grid=None,
+    race_budget: int | None = None,
+    race_final: int = 2,
     **hyper,
 ) -> PackingResult:
     """Run K differently-seeded islands as one fleet; return the best result.
+
+    **Self-tuning portfolio (racing).**  ``auto=True`` replaces the fixed
+    lineup with a successive-halving hyperparameter race: every config in
+    ``race_grid`` (default `DEFAULT_RACE_GRID` — chain counts, temperature
+    ladders, population sizes, mutation rates; entries are ``(algorithm,
+    hyper-overrides)`` pairs or full `IslandSpec`s, seeded ``seed + k``)
+    starts as an island, and at migration barriers the race ledger decides
+    who keeps running.  The ledger (``race_budget``, in chain-annealing-step
+    equivalents — see `_island_work`) defaults to exactly the total work the
+    *default* lineup (``n_islands`` islands cycling ``algorithms``) would
+    consume under the same iteration/generation budgets, so auto-tuning
+    never spends more than the lineup it replaces.  The ledger is split
+    evenly over ``log2(N / race_final) + 1`` phases; at each phase boundary
+    the worse half of the surviving islands (penalized best cost, first
+    island wins ties) is eliminated — elimination just stops advancing the
+    island (a fleet member freezes, a GA run is marked done), so survivors'
+    RNG streams are untouched — and the freed budget is *reallocated*: the
+    survivors' engine budgets are extended barrier by barrier until the
+    ledger is spent.  Races are bit-reproducible, machine-independent, and
+    checkpoint/resume-safe like any other portfolio run (the race state
+    rides the snapshot payload); ``params["race"]`` records the ledger,
+    the eliminations, and the survivors.  Per-island ``max_iterations`` /
+    ``max_generations`` only anchor the default ledger — the race itself
+    extends survivors past them by design (patience still freezes islands,
+    and ``max_seconds`` stays the outer safety cap).
+    Racing semantics: docs/DESIGN.md section 16.
 
     ``islands`` gives full control; otherwise ``n_islands`` specs are derived
     by cycling ``algorithms`` with seeds ``seed, seed+1, ...``.  ``hyper``
@@ -586,13 +846,28 @@ def pack_portfolio(
             DeprecationWarning,
             stacklevel=2,
         )
-    if islands is None:
-        if n_islands < 1:
-            raise ValueError("n_islands must be >= 1")
+    if not auto and (race_grid is not None or race_budget is not None):
+        raise ValueError("race_grid/race_budget require auto=True")
+    if n_islands < 1:
+        raise ValueError("n_islands must be >= 1")
+    default_specs = [
+        IslandSpec(algorithm=algorithms[k % len(algorithms)], seed=seed + k)
+        for k in range(n_islands)
+    ]
+    if auto:
+        if islands is not None:
+            raise ValueError(
+                "pass auto=True (with race_grid=...) or islands=..., not both"
+            )
+        grid = DEFAULT_RACE_GRID if race_grid is None else list(race_grid)
         islands = [
-            IslandSpec(algorithm=algorithms[k % len(algorithms)], seed=seed + k)
-            for k in range(n_islands)
+            entry if isinstance(entry, IslandSpec)
+            else IslandSpec(algorithm=entry[0], seed=seed + k,
+                            hyper=dict(entry[1]))
+            for k, entry in enumerate(grid)
         ]
+    elif islands is None:
+        islands = default_specs
     islands = list(islands)
     if not islands:
         raise ValueError("portfolio needs at least one island")
@@ -606,8 +881,15 @@ def pack_portfolio(
 
         ck = PortfolioCheckpointer(
             checkpoint_dir,
-            portfolio_config_key(prob, islands, interval, intra_layer,
-                                 backend, sa_chains, hyper),
+            portfolio_config_key(
+                prob, islands, interval, intra_layer, backend, sa_chains,
+                hyper,
+                race=(
+                    (int(race_budget) if race_budget is not None else None,
+                     int(race_final))
+                    if auto else None
+                ),
+            ),
             every=checkpoint_every, resume=resume, on_checkpoint=on_checkpoint,
         )
     hetero = prob.n_kinds > 1
@@ -711,7 +993,7 @@ def pack_portfolio(
     # DEFAULT_MIGRATION_EVERY-iteration barriers purely to cut snapshots —
     # barrier segmentation never changes trajectories (PR-5 contract)
     seg = interval if interval > 0 else (
-        DEFAULT_MIGRATION_EVERY if ck is not None else 0
+        DEFAULT_MIGRATION_EVERY if (ck is not None or auto) else 0
     )
     # per-family strides rebalance heterogeneous lineups (see the module
     # constants); homogeneous lineups and snapshot-only segmentation keep
@@ -726,6 +1008,49 @@ def pack_portfolio(
         for g in groups
     ]
     labels = [_group_label(g, i) for i, g in enumerate(groups)]
+    # --- racing state: static work weights, the ledger, and (on resume)
+    # the replayed eliminations
+    race = None
+    agroup: list[int] = []
+    members_of: list[list[int]] = [[] for _ in groups]
+    if auto:
+        gi_of = {id(g): i for i, g in enumerate(groups)}
+        ga_gi = next(
+            (i for i, g in enumerate(groups) if isinstance(g, _GAGroup)), None
+        )
+        work: list[int] = []
+        for k, isl in enumerate(adapters):
+            if isinstance(isl, _FleetIsland):
+                g, fam = gi_of[id(isl.group)], "delta"
+            elif isinstance(isl, _GAIsland):
+                g, fam = ga_gi, "ga"
+            else:
+                g = gi_of[id(isl)]
+                fam = "scalar" if not isl.single else "delta"
+            agroup.append(g)
+            members_of[g].append(k)
+            work.append(_island_work(isl.packer, fam, strides[g]))
+        if race_budget is None:
+            # equal total budget vs the lineup auto replaces: the default
+            # ``n_islands`` lineup's work under the same budget knobs
+            dpackers = [
+                make_packer(
+                    spec.algorithm, seed=spec.seed, max_seconds=max_seconds,
+                    intra_layer=intra_layer, backend=backend,
+                    **{
+                        **({"n_chains": sa_chains}
+                           if spec.algorithm == "sa-s" else {}),
+                        **hyper,
+                    },
+                )
+                for spec in default_specs
+            ]
+            race_budget = _lineup_work(
+                dpackers, [p._resolve_backend() for p in dpackers], interval
+            )
+        race = _Race(work, race_budget, race_final)
+        if ck is not None and ck.race is not None:
+            race.restore(ck.race, adapters)
     # the fused pair: the (only) SA fleet group + the GA lockstep pack,
     # merged into one main-thread dispatch unit when both engines resolved
     # to a jax backend (forced either way via ``fused``)
@@ -765,21 +1090,47 @@ def pack_portfolio(
             group_seconds.pop(labels[i])
     barrier_seconds: list[float] = []
     try:
-        while any(not isl.done() for isl in adapters):
+        # racing gates the loop itself: a budget-done survivor is revived by
+        # the extension below, so only the race's live/ledger checks (or the
+        # wall cap) may end an auto run
+        while race is not None or any(not isl.done() for isl in adapters):
             if barrier > 0 and time.perf_counter() - t0 > max_seconds:
                 truncated = True
                 break
-            barrier += 1
             t_bar = time.perf_counter()
-            unbounded = (single and ck is None) or seg <= 0
+            unbounded = race is None and ((single and ck is None) or seg <= 0)
             limits = [
-                None if unbounded else barrier * s for s in strides
+                None if unbounded else (barrier + 1) * s for s in strides
             ]
+            idle: frozenset = frozenset()
+            if race is not None:
+                # extend every surviving island's engine budget to this
+                # barrier's limit FIRST (reallocation is just a larger
+                # it_limit — it revives islands that stopped on budget,
+                # funded by the work the eliminated islands never ran),
+                # then let the ledger gate the barrier
+                for k, isl in enumerate(adapters):
+                    if race.alive[k]:
+                        isl.extend(limits[agroup[k]])
+                live = race.live(adapters)
+                if not live:
+                    break  # every survivor frozen or wall-capped
+                if not race.charge(live):
+                    break  # ledger spent: the race is over
+                # eliminated islands vacate their lane: a group with no
+                # live member is never dispatched (its states are inert, so
+                # skipping it cannot perturb survivors' RNG streams)
+                idle = frozenset(
+                    i for i, members in enumerate(members_of)
+                    if all(adapters[k].done() for k in members)
+                )
+            barrier += 1
             progressed = [False] * len(groups)
             if pool is not None:
                 futures = {
                     i: pool.submit(_timed_advance, groups[i], limits[i])
                     for i in side_idx
+                    if i not in idle
                 }
             else:
                 futures = {}
@@ -794,6 +1145,8 @@ def pack_portfolio(
                     i for i in range(len(groups)) if i not in futures
                 ]
                 for i in mains:
+                    if i in idle:
+                        continue
                     progressed[i], dt = _timed_advance(groups[i], limits[i])
                     group_seconds[labels[i]] += dt
             for i, fut in futures.items():
@@ -811,8 +1164,13 @@ def pack_portfolio(
                 for k, isl in enumerate(adapters):
                     if k != src:
                         migrations += isl.migrate_in(migrant)
+            if race is not None:
+                race.maybe_halve(adapters, barrier, lam)
             if ck is not None and barrier % ck.every == 0:
-                ck.save_groups(groups, barrier, migrations)
+                ck.save_groups(
+                    groups, barrier, migrations,
+                    race=race.state() if race is not None else None,
+                )
             barrier_seconds.append(time.perf_counter() - t_bar)
             if not any(progressed):
                 break  # no island can move: budgets exhausted mid-barrier
@@ -832,7 +1190,7 @@ def pack_portfolio(
             "barrier(s) before the islands' iteration/patience budgets; the "
             "result is NOT seed-reproducible (params['truncated_by_wallclock']"
             " is True). Give islands iteration budgets for reproducible runs.",
-            RuntimeWarning,
+            TruncationWarning,
             stacklevel=2,
         )
     raws = [isl.raw() for isl in adapters]
@@ -867,6 +1225,21 @@ def pack_portfolio(
             strides=dict(zip(labels, strides)),
             barrier_seconds=barrier_seconds,
             group_seconds=group_seconds,
+            **(
+                dict(race=dict(
+                    budget=race.budget,
+                    spent=race.spent,
+                    halvings=race.halvings,
+                    phase_budget=race.phase_budget,
+                    final_k=race.final_k,
+                    work=list(race.work),
+                    survivors=[
+                        k for k, a in enumerate(race.alive) if a
+                    ],
+                    eliminated=race.eliminated,
+                ))
+                if race is not None else {}
+            ),
         ),
     )
 

@@ -142,21 +142,29 @@ def sweep_config_key(keys: Sequence[tuple]) -> str:
 
 
 def portfolio_config_key(
-    prob, islands, interval, intra_layer, backend, sa_chains, hyper
+    prob, islands, interval, intra_layer, backend, sa_chains, hyper,
+    race=None,
 ) -> str:
     """Identity of a portfolio run.  ``max_seconds`` is deliberately
     excluded: it is an outer safety cap, and resuming a preempted run with
-    a fresh (or larger) wall budget is the expected workflow."""
+    a fresh (or larger) wall budget is the expected workflow.  ``race``
+    (the ``(race_budget, race_final)`` tuple of a ``pack_portfolio(auto=
+    True)`` run, None otherwise) is part of the identity: a race resumed
+    under a different ledger would reach different eliminations.  Non-race
+    digests are unchanged from format 1."""
     spec = tuple(
         (s.algorithm, int(s.seed),
          tuple(sorted((k, repr(v)) for k, v in s.hyper.items())))
         for s in islands
     )
-    return _digest(repr((
+    key = (
         FORMAT, "portfolio", prob.fingerprint(), spec, int(interval),
         bool(intra_layer), backend, int(sa_chains),
         tuple(sorted((k, repr(v)) for k, v in hyper.items())),
-    )))
+    )
+    if race is not None:
+        key = key + (("race",) + tuple(race),)
+    return _digest(repr(key))
 
 
 # ----------------------------------------------------------- engine codecs
@@ -566,10 +574,24 @@ class PortfolioCheckpointer(_Checkpointer):
 
     GROUP_TAGS = ("fleet", "ga", "scalar", "single")
 
-    def save_groups(self, groups, barrier: int, migrations: int) -> None:
+    def save_groups(self, groups, barrier: int, migrations: int,
+                    race: dict | None = None) -> None:
+        """``race`` is the `_Race.state()` payload of a ``auto=True`` run
+        (ledger counters + the elimination log), None for plain lineups —
+        it rides the JSON payload so a preempted race resumes past its
+        eliminations (the config key already pins the ledger identity)."""
         arrays, metas = self._encode_groups(groups)
-        self._save(arrays, {"barrier": int(barrier),
-                            "migrations": int(migrations), "groups": metas})
+        payload = {"barrier": int(barrier),
+                   "migrations": int(migrations), "groups": metas}
+        if race is not None:
+            payload["race"] = race
+        self._save(arrays, payload)
+
+    @property
+    def race(self) -> dict | None:
+        """The snapshotted racing state, None when starting fresh or when
+        the snapshot was cut by a non-racing run."""
+        return None if self.payload is None else self.payload.get("race")
 
     def restore_groups(self, groups) -> tuple[int, int] | None:
         """Overwrite freshly built groups with the checkpointed states;

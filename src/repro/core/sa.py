@@ -1204,6 +1204,47 @@ class SimulatedAnnealingPacker:
         st.best_pcosts[r] = min(st.best_pcosts[r], st.pcosts[r])
         return True
 
+    # ------------------------------------------------- portfolio racing hooks
+    # Successive-halving racing (portfolio.pack_portfolio(auto=True)) treats
+    # the iteration budget as a portfolio-level ledger: a surviving island's
+    # budget is *extended* barrier by barrier (reallocation is just a larger
+    # ``it_limit``), and an eliminated island simply stops advancing.  Both
+    # hooks preserve the trajectory contract: extension only lifts the budget
+    # ceiling (never touches patience, RNG, or the wall cap), and elimination
+    # reuses the freeze mechanism — a frozen problem draws no RNG, so fleet
+    # siblings' streams are untouched.
+
+    def _block_extend(self, st: _BlockState, it_limit: int) -> None:
+        """Raise the fleet's iteration budget to at least ``it_limit``,
+        reviving a state that stopped *on budget* (never one frozen on
+        patience or cut by the wall cap)."""
+        if st.done and not st.frozen and st.it >= self.max_iterations:
+            st.done = False
+        self.max_iterations = max(self.max_iterations, int(it_limit))
+
+    def _block_eliminate(self, st: _BlockState, j: int) -> None:
+        """Stop fleet problem ``j`` forever by pushing every chain past
+        patience: the loop-top activity mask skips frozen problems before
+        any RNG draw, so siblings' streams are bit-identical to a run where
+        ``j`` never existed past this point."""
+        lo = j * self.n_chains
+        st.stale[lo : lo + self.n_chains] = self.patience
+
+    def _scalar_extend(self, st: _ScalarRun, it_limit: int) -> None:
+        if st.done and st.stale < self.patience and st.it >= self.max_iterations:
+            st.done = False
+        self.max_iterations = max(self.max_iterations, int(it_limit))
+
+    def _single_extend(self, st: _SingleChainRun, it_limit: int) -> None:
+        if st.done and st.stale < self.patience and st.it >= self.max_iterations:
+            st.done = False
+        self.max_iterations = max(self.max_iterations, int(it_limit))
+
+    def _loop_eliminate(self, st) -> None:
+        """Stop a scalar/single-chain state forever (`_ScalarRun` and
+        `_SingleChainRun` both gate their loops on ``st.done``)."""
+        st.done = True
+
     # ------------------------------------------------------------------ result
     def _result(self, best, best_cost, wall, trace, iterations, backend, uphill):
         params = dict(

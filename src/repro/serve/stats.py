@@ -8,6 +8,7 @@ on the loop).
 from __future__ import annotations
 
 import bisect
+import math
 
 
 class LatencyStats:
@@ -43,7 +44,11 @@ class LatencyStats:
     def percentile(self, q: float) -> float:
         if not self._sorted:
             return 0.0
-        idx = min(len(self._sorted) - 1, int(q * (len(self._sorted) - 1) + 0.5))
+        # nearest-rank: smallest sample with at least ceil(q*n) samples <= it.
+        # (round-half-up interpolation overshoots at small N: p50 of two
+        # samples must be the lower one, not the upper)
+        n = len(self._sorted)
+        idx = max(0, min(n - 1, math.ceil(q * n) - 1))
         return self._sorted[idx]
 
     @property

@@ -54,6 +54,9 @@ def test_bench_roofline_smoke():
     assert isinstance(rows, list)
 
 
+# wall-budgeted on purpose (the bench measures throughput, not a pinned
+# trajectory) — un-promote the truncation warning pytest.ini turns into an error
+@pytest.mark.filterwarnings("default:.*NOT seed-reproducible.*:RuntimeWarning")
 def test_bench_portfolio_smoke():
     from benchmarks import bench_engine
 
@@ -62,6 +65,19 @@ def test_bench_portfolio_smoke():
     assert [r[1] for r in rows[::2]] == [
         "sa-fleet", "mixed", "ga-heavy", "scalar-heavy"
     ]
+
+
+def test_bench_racing_smoke():
+    from benchmarks import bench_racing
+    from benchmarks.common import OUT_DIR
+
+    rows = bench_racing.run(smoke=True)
+    assert len(rows) == 1  # one accelerator at smoke scale
+    name, budget, spent, auto_cost, default_cost = rows[0][:5]
+    assert name == "CNV-W1A1"
+    assert 0 < spent <= budget  # the race ledger is a hard cap
+    assert auto_cost > 0 and default_cost > 0
+    assert (OUT_DIR / "BENCH_racing.json").is_file()
 
 
 def test_bench_serve_smoke():
@@ -78,6 +94,7 @@ def test_bench_serve_smoke():
 
 
 @pytest.mark.slow
+@pytest.mark.filterwarnings("default:.*NOT seed-reproducible.*:RuntimeWarning")
 def test_bench_run_smoke_executes_every_module():
     """`python -m benchmarks.run --smoke` completes every bench entry point
     (the anti-rot lane; ~25 s total on the CI host)."""

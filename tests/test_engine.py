@@ -314,9 +314,13 @@ def test_sa_multi_chain_warm_start_from_chains():
 
 # -------------------------------------------------------------- portfolio
 def test_portfolio_basic():
+    # iteration/generation budgets (max_seconds is a safety cap only):
+    # wall-budgeted portfolio runs are machine-dependent and leak the
+    # TruncationWarning that pytest.ini promotes to an error
     prob = c.get_problem("CNV-W2A2")
     r = c.pack_portfolio(
-        prob, n_islands=3, seed=0, max_seconds=2.0, backend="python"
+        prob, n_islands=3, seed=0, max_seconds=60.0, backend="python",
+        max_iterations=1280, max_generations=24,
     )
     r.solution.validate()
     assert r.solution.cost() == r.solution.cost_full() == r.cost
@@ -331,8 +335,8 @@ def test_portfolio_basic():
 
 def test_portfolio_via_pack_and_single_island():
     prob = c.get_problem("CNV-W1A1")
-    r = c.pack(prob, "portfolio", seed=0, max_seconds=1.0, n_islands=1,
-               backend="python")
+    r = c.pack(prob, "portfolio", seed=0, max_seconds=60.0, n_islands=1,
+               backend="python", max_generations=40)
     r.solution.validate()
     assert r.cost <= prob.baseline_cost()
 
@@ -346,9 +350,11 @@ def test_portfolio_batched_sa_island():
         algorithms=("ga-nfd", "sa-s"),
         n_islands=2,
         seed=0,
-        max_seconds=1.5,
+        max_seconds=60.0,
         backend="python",
         sa_chains=3,
+        max_iterations=1280,
+        max_generations=24,
     )
     r.solution.validate()
     assert r.cost <= prob.baseline_cost()
@@ -362,8 +368,9 @@ def test_portfolio_explicit_island_specs():
         c.IslandSpec("ga-nfd", seed=0),
         c.IslandSpec("sa-nfd", seed=5, hyper={"sa_t0": 10.0}),
     ]
-    r = c.pack_portfolio(prob, islands=islands, max_seconds=1.0,
-                         backend="python")
+    r = c.pack_portfolio(prob, islands=islands, max_seconds=60.0,
+                         backend="python", max_iterations=2000,
+                         max_generations=30)
     r.solution.validate()
     assert [i["algorithm"] for i in r.params["islands"]] == ["ga-nfd", "sa-nfd"]
 

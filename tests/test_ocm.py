@@ -294,9 +294,12 @@ def test_sa_multi_chain_hetero_backends_identical():
 
 
 def test_portfolio_hetero():
+    # iteration budgets, not wall-clock: machine-independent, and no
+    # TruncationWarning (promoted to an error by pytest.ini) can leak
     prob = _tight_problem()
     r = c.pack_portfolio(
-        prob, n_islands=3, seed=0, max_seconds=2.0, backend="python", sa_chains=3
+        prob, n_islands=3, seed=0, max_seconds=60.0, backend="python",
+        sa_chains=3, max_iterations=1500, max_generations=30,
     )
     r.solution.validate()
     assert r.solution.cost() == r.solution.cost_full() == r.cost

@@ -1,0 +1,214 @@
+"""Self-tuning portfolio: successive-halving racing (pack_portfolio(auto=True)).
+
+The racing contract (docs/DESIGN.md section 16):
+
+* bit-reproducible — same seed, same grid, same ledger => identical
+  trajectory, eliminations, and final packing, run to run;
+* a single-entry race grid is bit-identical to the equivalent plain
+  lineup (the racing driver adds no trajectory of its own);
+* the ledger is a hard cap — ``spent <= budget`` always, and charging is
+  whole-barrier (the race never overdraws mid-barrier);
+* elimination does not perturb survivors' RNG streams (concurrent and
+  serial schedulers agree bit-exactly);
+* a race killed mid-flight resumes to the identical eliminations and
+  final cost (fault-injection, same contract as tests/test_resume.py);
+* at equal TOTAL iteration budget the auto-tuned portfolio is no worse
+  than the default lineup it replaces (pinned slow test on the paper's
+  Table 3/4 accelerators).
+"""
+import numpy as np
+import pytest
+
+from faultinject import SimulatedCrash, crash_at
+from repro.core import (
+    DEFAULT_RACE_GRID,
+    IslandSpec,
+    get_problem,
+    pack_portfolio,
+)
+from repro.core.problem import Buffer, PackingProblem
+
+# deterministic engines: iteration budgets terminate, wall/patience parked
+_KW = dict(max_seconds=1e9, patience=10**9, backend="python")
+
+
+def _problem(seed: int = 11) -> PackingProblem:
+    rng = np.random.default_rng(seed)
+    bufs = [
+        Buffer(width=int(rng.integers(1, 80)), depth=int(rng.integers(1, 40_000)),
+               layer=int(rng.integers(0, 5)))
+        for _ in range(int(rng.integers(16, 28)))
+    ]
+    return PackingProblem(bufs, max_items=4, name=f"race{seed}")
+
+
+# small, cheap grid exercising both engine families and the scalar lane
+_GRID = [
+    ("sa-s", {"n_chains": 4}),
+    ("sa-s", {"n_chains": 2, "ladder_max": 8.0}),
+    ("ga-nfd", {"n_pop": 10}),
+    ("sa-nfd", {}),
+]
+_RACE = dict(_KW, auto=True, race_grid=_GRID, race_budget=6000, race_final=2,
+             migration_every=32, seed=3)
+
+
+def _record(res):
+    """Everything the bit-reproducibility contract covers."""
+    race = res.params["race"]
+    return (
+        res.cost, res.solution.state_dict(), res.iterations,
+        res.params["barriers"], res.params["migrations"],
+        race["spent"], tuple(race["survivors"]),
+        tuple((e["island"], e["barrier"]) for e in race["eliminated"]),
+    )
+
+
+# ------------------------------------------------------------- API validation
+def test_race_grid_without_auto_raises():
+    with pytest.raises(ValueError, match="auto=True"):
+        pack_portfolio(_problem(), race_grid=_GRID, **_KW)
+    with pytest.raises(ValueError, match="auto=True"):
+        pack_portfolio(_problem(), race_budget=1000, **_KW)
+
+
+def test_auto_with_explicit_islands_raises():
+    with pytest.raises(ValueError, match="not both"):
+        pack_portfolio(_problem(), auto=True,
+                       islands=[IslandSpec("sa-s", seed=0)], **_KW)
+
+
+def test_default_race_grid_shape():
+    # entries are (algorithm, hyper-overrides) pairs over both engine families
+    assert len(DEFAULT_RACE_GRID) >= 8
+    algos = {a for a, _ in DEFAULT_RACE_GRID}
+    assert "sa-s" in algos and "ga-nfd" in algos
+    assert all(isinstance(h, dict) for _, h in DEFAULT_RACE_GRID)
+
+
+# --------------------------------------------------------------- determinism
+@pytest.fixture(scope="module")
+def race_ref():
+    return _record(pack_portfolio(_problem(), **_RACE))
+
+
+def test_racing_is_bit_reproducible(race_ref):
+    assert _record(pack_portfolio(_problem(), **_RACE)) == race_ref
+
+
+def test_racing_ledger_is_respected_and_spent(race_ref):
+    res = pack_portfolio(_problem(), **_RACE)
+    race = res.params["race"]
+    assert race["budget"] == 6000
+    assert 0 < race["spent"] <= race["budget"]
+    # whole-barrier charging: the shortfall is less than one barrier's worth
+    # of the surviving live set (the race stops rather than overdraw)
+    barrier_cost = sum(race["work"][k] for k in race["survivors"])
+    assert race["budget"] - race["spent"] < barrier_cost
+    assert res.params["truncated_by_wallclock"] is False
+
+
+def test_racing_halves_to_final_k(race_ref):
+    res = pack_portfolio(_problem(), **_RACE)
+    race = res.params["race"]
+    # 4 configs, final_k=2: exactly one halving eliminates two islands
+    assert len(race["survivors"]) == 2
+    assert len(race["eliminated"]) == 2
+    assert sorted(
+        race["survivors"] + [e["island"] for e in race["eliminated"]]
+    ) == [0, 1, 2, 3]
+    # eliminations happen at a recorded barrier with the losing value pinned
+    assert all(e["barrier"] >= 1 and e["value"] >= 0 for e in race["eliminated"])
+
+
+def test_racing_concurrent_matches_serial(race_ref):
+    got = _record(pack_portfolio(_problem(), scheduler="serial", **_RACE))
+    assert got == race_ref
+
+
+def test_racing_default_budget_equals_default_lineup_work():
+    # race_budget=None anchors the ledger to the work the default lineup
+    # would consume under the same budgets — auto never spends more than
+    # the lineup it replaces
+    kw = dict(_KW, seed=3, migration_every=32, max_iterations=256,
+              max_generations=8, sa_chains=4)
+    res = pack_portfolio(_problem(), auto=True, race_grid=_GRID[:2], **kw)
+    race = res.params["race"]
+    assert race["budget"] > 0
+    assert race["spent"] <= race["budget"]
+
+
+# ------------------------------------------------- single-entry grid == plain
+def test_single_entry_grid_matches_plain_lineup():
+    """A race of one config has nobody to eliminate: the racing driver must
+    reduce exactly to the plain portfolio, bit for bit."""
+    prob = _problem()
+    seg, chains, budget = 32, 4, 4096
+    barriers = budget // (seg * chains)
+    auto = pack_portfolio(
+        prob, auto=True, race_grid=[("sa-s", {"n_chains": chains})],
+        race_budget=budget, migration_every=seg, seed=0, **_KW,
+    )
+    plain = pack_portfolio(
+        prob, islands=[IslandSpec("sa-s", seed=0, hyper={"n_chains": chains})],
+        migration_every=seg, max_iterations=barriers * seg, seed=0, **_KW,
+    )
+    assert auto.cost == plain.cost
+    assert auto.iterations == plain.iterations
+    assert auto.solution.state_dict() == plain.solution.state_dict()
+    assert [c for _, c in auto.trace] == [c for _, c in plain.trace]
+    assert auto.params["race"]["survivors"] == [0]
+    assert auto.params["race"]["eliminated"] == []
+
+
+# ------------------------------------------------------ crash/resume mid-race
+def test_race_killed_mid_flight_resumes_bit_identical(tmp_path, race_ref):
+    # crash late enough that eliminations already happened (the race state —
+    # ledger position AND the elimination replay list — must ride the
+    # snapshot, not just the engine states)
+    kw = dict(_RACE, checkpoint_dir=tmp_path, checkpoint_every=2)
+    with pytest.raises(SimulatedCrash):
+        pack_portfolio(_problem(), on_checkpoint=crash_at(6), **kw)
+    resumed = pack_portfolio(_problem(), resume=True, **kw)
+    assert _record(resumed) == race_ref
+
+
+@pytest.mark.parametrize("kill_after", [1, 3])
+def test_race_killed_early_resumes_bit_identical(tmp_path, race_ref, kill_after):
+    kw = dict(_RACE, checkpoint_dir=tmp_path, checkpoint_every=1)
+    with pytest.raises(SimulatedCrash):
+        pack_portfolio(_problem(), on_checkpoint=crash_at(kill_after), **kw)
+    resumed = pack_portfolio(_problem(), resume=True, **kw)
+    assert _record(resumed) == race_ref
+
+
+def test_race_checkpointing_is_trajectory_neutral(tmp_path, race_ref):
+    got = pack_portfolio(_problem(), checkpoint_dir=tmp_path,
+                         checkpoint_every=2, **_RACE)
+    assert _record(got) == race_ref
+
+
+# ------------------------------------- deliverable: auto beats default lineup
+@pytest.mark.slow
+@pytest.mark.parametrize("accel", ["CNV-W1A1", "CNV-W2A2"])
+def test_auto_no_worse_than_default_at_equal_total_budget(accel):
+    """The PR deliverable, pinned: at equal TOTAL iteration budget the
+    self-tuned portfolio matches or beats the default same-size lineup on
+    the paper's Table 3/4 accelerators.  SA-only lineups keep the work
+    ledger in raw chain-step units so "equal budget" is exact."""
+    prob = get_problem(accel)
+    grid = [
+        ("sa-s", {"n_chains": 4}),
+        ("sa-s", {"n_chains": 4, "ladder_max": 8.0}),
+        ("sa-s", {"n_chains": 4, "sa_t0": 60.0, "sa_rc": 0.5}),
+        ("sa-s", {"n_chains": 4, "sa_t0": 10.0, "sa_rc": 2.0}),
+    ]
+    kw = dict(_KW, seed=0, migration_every=32, sa_chains=4,
+              n_islands=4, algorithms=("sa-s",), max_iterations=512)
+    # ledger defaults to the default lineup's total work: 4 islands x 512
+    # iterations x 4 chains of raw chain-steps each
+    auto = pack_portfolio(prob, auto=True, race_grid=grid, **kw)
+    default = pack_portfolio(prob, **kw)
+    assert auto.params["race"]["budget"] == 4 * 512 * 4
+    assert auto.params["race"]["spent"] <= auto.params["race"]["budget"]
+    assert auto.cost <= default.cost

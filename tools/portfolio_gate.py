@@ -17,6 +17,12 @@ the serial-loop 0.24x cliff — not to benchmark.  Quality is asserted
 only as a sanity bound (the fleet must beat the singleton baseline);
 cost-vs-threads comparisons at CI budgets are pure noise.
 
+The gate also runs a racing smoke (``--skip-racing`` to disable): a
+tiny deterministic ``pack_portfolio(auto=True)`` race, run twice, must
+be bit-identical (cost/iterations/eliminations) and must respect its
+ledger — the machine-independent half of the self-tuning deliverable
+(docs/DESIGN.md section 16).
+
 Set ``PORTFOLIO_GATE_SKIP=1`` to skip the gate entirely (e.g. on
 known-oversubscribed runners); it exits 0 without running anything.
 """
@@ -36,6 +42,36 @@ def _throughput(res) -> float:
     return res.iterations / max(res.wall_time_s, 1e-9)
 
 
+def _racing_smoke(c, prob, seed: int) -> int:
+    """Deterministic auto-race gate: bit-equal double run, ledger respected."""
+    kw = dict(
+        auto=True, seed=seed, backend="python", max_seconds=1e9,
+        patience=10**9, migration_every=32, race_budget=4096,
+        race_grid=[
+            ("sa-s", {"n_chains": 4}),
+            ("sa-s", {"n_chains": 4, "ladder_max": 8.0}),
+            ("ga-nfd", {"n_pop": 10}),
+            ("sa-nfd", {}),
+        ],
+    )
+
+    def record(res):
+        race = res.params["race"]
+        return (res.cost, res.iterations, res.solution.state_dict(),
+                race["spent"], tuple(race["survivors"]),
+                tuple((e["island"], e["barrier"]) for e in race["eliminated"]))
+
+    a, b = record(c.pack_portfolio(prob, **kw)), record(c.pack_portfolio(prob, **kw))
+    race_ok = a == b and 0 < a[3] <= 4096
+    print(f"  racing  : cost {a[0]}  spent {a[3]}/4096  "
+          f"survivors {list(a[4])}  bit-equal {a == b}")
+    if not race_ok:
+        print("FAIL: racing smoke — run-to-run mismatch or ledger overdraw "
+              "(pack_portfolio(auto=True) determinism has regressed)")
+        return 1
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--accelerator", default="CNV-W1A1")
@@ -45,6 +81,8 @@ def main(argv=None) -> int:
                     help="min fleet/threads throughput ratio (default 0.7)")
     ap.add_argument("--islands", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-racing", action="store_true",
+                    help="skip the deterministic auto-race smoke")
     args = ap.parse_args(argv)
 
     if os.environ.get("PORTFOLIO_GATE_SKIP") == "1":
@@ -84,6 +122,8 @@ def main(argv=None) -> int:
         print(f"FAIL: fleet throughput {ratio:.2f}x threads is below the "
               f"{args.threshold:.2f}x gate — the concurrent barrier "
               "scheduler has regressed (see docs/DESIGN.md section 13)")
+        return 1
+    if not args.skip_racing and _racing_smoke(c, prob, args.seed):
         return 1
     print("OK")
     return 0
